@@ -1,0 +1,157 @@
+"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+
+Lowers + compiles variants of the three chosen cells on the single-pod mesh,
+re-derives the roofline terms from the HLO, and writes one JSON per variant
+to benchmarks/results/perf/.  Each variant is a (hypothesis, change) pair —
+the log in EXPERIMENTS.md quotes these numbers directly.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py [--only NAME]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+
+from benchmarks.hlo_analysis import analyze_hlo
+from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                 analytic_bytes_per_device,
+                                 model_flops_per_device)
+from repro.configs import get_config
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, policy_for
+from repro.train.steps import TrainHParams
+
+OUT = Path(__file__).parent / "results" / "perf"
+
+
+def measure(tag: str, arch: str, cell: str, cfg, hp=None) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with use_mesh(mesh, **policy_for(cfg, cell)):
+        c = build_cell(cfg, cell, mesh, hp=hp)
+        jitted = jax.jit(c.step, in_shardings=c.in_shardings,
+                         out_shardings=c.out_shardings)
+        lowered = jitted.lower(*c.args)
+    compiled = lowered.compile()
+    stats = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    nd = mesh.devices.size
+    coll = sum(stats.collective_bytes.values())
+    hbm_lb = analytic_bytes_per_device(cfg, cell, nd)
+    terms = {
+        "compute": stats.flops / PEAK_FLOPS,
+        "memory": hbm_lb / HBM_BW,
+        "collective": coll / ICI_BW,
+    }
+    mf = model_flops_per_device(cfg, cell, nd)
+    rec = {
+        "tag": tag, "arch": arch, "cell": cell,
+        "flops": stats.flops,
+        "collective_bytes": stats.collective_bytes,
+        "collective_counts": {k: int(v) for k, v in stats.collective_counts.items()},
+        "hbm_analytic_bytes": hbm_lb,
+        "hbm_parsed_bytes": stats.hbm_traffic_bytes,
+        "terms_s": terms,
+        "dominant": max(terms, key=terms.get),
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(terms.values()),
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    t = terms
+    print(f"{tag}: frac={rec['roofline_fraction']:.4f} dominant={rec['dominant']} "
+          f"compute={t['compute']:.3f}s mem={t['memory']:.3f}s "
+          f"coll={t['collective']:.3f}s coll_GiB={coll/2**30:.1f} "
+          f"temp={rec['temp_gib']:.1f}GiB", flush=True)
+    return rec
+
+
+def h1_deepseek_train(only=None):
+    """Collective-bound cell: gradient reduce-scatter + remat policy."""
+    arch, cell = "deepseek-67b", "train_4k"
+    cfg = get_config(arch)
+    base_hp = TrainHParams(accum=4, shard_grads=False)
+    variants = [
+        ("h1_baseline", base_hp),
+        ("h1_shard_grads", dataclasses.replace(base_hp, shard_grads=True)),
+        ("h1_remat_dots", dataclasses.replace(base_hp, shard_grads=True,
+                                              remat_policy="dots")),
+    ]
+    for tag, hp in variants:
+        if only and only not in tag:
+            continue
+        measure(tag, arch, cell, cfg, hp)
+
+
+def h2_deepseek_decode(only=None):
+    """Memory-bound decode: fp8 KV cache."""
+    arch, cell = "deepseek-67b", "decode_32k"
+    base = get_config(arch)
+    variants = [
+        ("h2_baseline_bf16", base),
+        ("h2_fp8_cache", dataclasses.replace(base, kv_cache_dtype="float8_e4m3fn")),
+    ]
+    for tag, cfg in variants:
+        if only and only not in tag:
+            continue
+        measure(tag, arch, cell, cfg)
+
+
+def h3_mamba_chunk(only=None):
+    """Paper-representative: SSD chunk (facet/tile) size sweep."""
+    arch, cell = "mamba2-370m", "train_4k"
+    base = get_config(arch)
+    for chunk in (64, 128, 256):
+        tag = f"h3_chunk{chunk}"
+        if only and only not in tag:
+            continue
+        cfg = dataclasses.replace(base, ssm_chunk=chunk)
+        measure(tag, arch, cell, cfg, TrainHParams(accum=1, shard_grads=False)
+                if chunk == -1 else None)
+
+
+def h2b_serving_sharding(only=None):
+    """Serving weights without FSDP (no per-layer param all-gathers) +
+    fp8 cache — the combined decode configuration."""
+    if only and "h2b" not in only:
+        return
+    arch, cell = "deepseek-67b", "decode_32k"
+    cfg = dataclasses.replace(get_config(arch), kv_cache_dtype="float8_e4m3fn")
+    measure("h2b_serving_params_fp8", arch, cell, cfg)
+
+
+def h4_parallelism_policy(only=None):
+    """Small-d_model archs: pure DP (model axis folded into batch) vs TP."""
+    for arch in ("qwen3-0.6b", "mamba2-370m"):
+        for mode in ("tp", "dp"):
+            tag = f"h4_{arch.split('-')[0]}_{mode}"
+            if only and only not in tag:
+                continue
+            cfg = dataclasses.replace(get_config(arch), parallelism=mode)
+            measure(tag, arch, "train_4k", cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    h1_deepseek_train(args.only)
+    h2_deepseek_decode(args.only)
+    h3_mamba_chunk(args.only)
+    h2b_serving_sharding(args.only)
+    h4_parallelism_policy(args.only)
+
+
+if __name__ == "__main__":
+    main()

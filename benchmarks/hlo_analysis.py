@@ -1,0 +1,328 @@
+"""Static analyzer for post-SPMD-partitioning HLO text.
+
+``compiled.cost_analysis()`` does NOT multiply ``while``-loop bodies by their
+trip count, so for scan-over-layers models it reports ~one layer of FLOPs.
+This module re-derives the per-device totals the roofline needs by walking
+the HLO call graph:
+
+* computations are parsed into (name -> ops) with a value-name -> byte-size map;
+* every computation gets an execution multiplier: entry = 1, while body/cond =
+  caller_mult x trip_count (trip count recovered from the loop condition's
+  comparison constant), fusion/call/conditional bodies = caller_mult;
+* FLOPs: ``dot`` ops contribute 2 * prod(result_shape) * prod(contracted dims)
+  (parsed from dimension numbers + operand shapes); convolutions analogous.
+* collective bytes: operand bytes of all-reduce / all-gather / reduce-scatter /
+  all-to-all / collective-permute, times the multiplier;
+* HBM traffic model: for every *top-level* op of non-fusion computations
+  (fusion internals stay in registers/VMEM), operand + result bytes — an
+  upper-bound-ish proxy for HBM bytes touched, again times multipliers.
+
+This is the "profile" of the dry-run container: exact static counts, no
+wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    collective_bytes: dict
+    collective_counts: dict
+    hbm_traffic_bytes: float
+    while_trips: dict
+
+
+def _parse_ops(body_lines: list[str]) -> list[_Op]:
+    ops = []
+    for ln in body_lines:
+        m = _OP_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result type: leading tuple-parenthesised or single token
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            rtype, rest = rhs[: i + 1], rhs[i + 1:].strip()
+        else:
+            parts = rhs.split(" ", 1)
+            rtype, rest = parts[0], parts[1] if len(parts) > 1 else ""
+        om = re.match(r"([\w\-]+)\((.*)$", rest)
+        if not om:
+            continue
+        opcode, tail = om.groups()
+        # operands: up to matching close paren
+        depth = 1
+        args = []
+        cur = ""
+        for ch in tail:
+            if ch == "(":
+                depth += 1
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(cur)
+                    break
+            if ch == "," and depth == 1:
+                args.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        operands = [a.strip().lstrip("%") for a in args if a.strip()]
+        attrs = tail[len("".join(args)) :]
+        ops.append(_Op(name, rtype, opcode, operands, tail))
+    return ops
+
+
+def _dot_flops(op: _Op, sizes_types: dict) -> float:
+    """2 * prod(result) * prod(contracted lhs dims)."""
+    res = _shape_dims(op.result_type)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    lhs = op.operands[0] if op.operands else None
+    lhs_type = sizes_types.get(lhs, "")
+    ldims = _shape_dims(lhs_type)
+    if not ldims:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if m:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(ldims[0][1]):
+                contract *= ldims[0][1][int(idx)]
+    else:
+        contract = ldims[0][1][-1] if ldims[0][1] else 1
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    # ---- split into computations --------------------------------------
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for ln in hlo_text.splitlines():
+        m = _COMP_HEADER.match(ln.strip()) if ln.rstrip().endswith("{") else None
+        if m and "=" not in ln.split("(")[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if ln.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(ln)
+    parsed = {name: _parse_ops(lines) for name, lines in comps.items()}
+    types = {
+        name: {op.name: op.result_type for op in ops} for name, ops in parsed.items()
+    }
+
+    # ---- call graph multipliers ----------------------------------------
+    entry = None
+    for ln in hlo_text.splitlines():
+        if ln.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", ln)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fall back: computation named like main
+        entry = next((n for n in comps if "main" in n), next(iter(comps), None))
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        for op in parsed.get(cond_name, []):
+            if op.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + op.attrs)
+                if m:
+                    best = max(best, int(m.group(1)))
+        # constants may be hoisted: also scan raw lines
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        return best
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    while order:
+        caller = order.pop(0)
+        cmult = mult[caller]
+        for op in parsed.get(caller, []):
+            callees: list[tuple[str, float]] = []
+            wm = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", op.attrs)
+            if op.opcode == "while" and wm:
+                cond, body = wm.groups()
+                t = trip_count(cond)
+                callees += [(cond, cmult * (t + 1)), (body, cmult * t)]
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs):
+                    callees.append((m.group(1), cmult))
+                m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+                if m:  # conditional: assume each branch runs (upper bound)
+                    for br in m.group(1).split(","):
+                        callees.append((br.strip().lstrip("%"), cmult))
+            for cn, cm in callees:
+                if cn in comps:
+                    mult[cn] += cm
+                    if cn not in seen:
+                        seen.add(cn)
+                        order.append(cn)
+
+    # ---- effective read size of a fusion/call operand -------------------
+    # A fusion whose parameter is only consumed by dynamic-slice ops reads
+    # just the slice, not the whole operand (scan-over-layers reads one
+    # layer's weights from the stacked array per trip).
+    def _called_comp(op: _Op) -> str | None:
+        m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.attrs)
+        return m.group(1) if m else None
+
+    def _operand_read_bytes(op: _Op, idx: int, full: int) -> int:
+        cn = _called_comp(op)
+        if cn is None or cn not in parsed:
+            return full
+        # find parameter idx inside the called computation
+        pname = None
+        for cop in parsed[cn]:
+            if cop.opcode == "parameter" and cop.operands == [str(idx)]:
+                pname = cop.name
+                break
+        if pname is None:
+            return full
+        # chase aliases (bitcast/copy/reshape/gte) transitively: if every
+        # real consumer is a slice-like read (or in-place DUS target), the
+        # effective bytes are the slice windows, not the whole operand.
+        aliases = {pname}
+        frontier = [pname]
+        while frontier:
+            a = frontier.pop()
+            for cop in parsed[cn]:
+                if a in cop.operands and cop.opcode in (
+                        "bitcast", "copy", "reshape", "get-tuple-element",
+                        "transpose"):
+                    if cop.name not in aliases:
+                        aliases.add(cop.name)
+                        frontier.append(cop.name)
+        consumer_sizes = []
+        for cop in parsed[cn]:
+            if cop.name in aliases:
+                continue
+            hit = [o for o in cop.operands if o in aliases]
+            if not hit:
+                continue
+            if cop.opcode in ("dynamic-slice", "slice", "gather"):
+                consumer_sizes.append(_type_bytes(cop.result_type))
+            elif cop.opcode == "dynamic-update-slice" and cop.operands and \
+                    cop.operands[0] in aliases:
+                upd = cop.operands[1] if len(cop.operands) > 1 else None
+                consumer_sizes.append(
+                    _type_bytes(types[cn].get(upd, "")) if upd else 0)
+            else:
+                return full
+        if consumer_sizes:
+            return min(sum(consumer_sizes), full)
+        return 0  # unused (or alias-only) parameter
+
+    def _result_write_bytes(op: _Op) -> int:
+        full = _type_bytes(op.result_type)
+        cn = _called_comp(op)
+        if cn is None or cn not in parsed:
+            return full
+        # root = last op of the computation body
+        body = parsed[cn]
+        if body and body[-1].opcode == "dynamic-update-slice" and \
+                len(body[-1].operands) > 1:
+            upd = body[-1].operands[1]
+            return min(_type_bytes(types[cn].get(upd, "")), full)
+        return full
+
+    # ---- accumulate ------------------------------------------------------
+    flops = 0.0
+    coll_bytes = {k: 0.0 for k in COLLECTIVES}
+    coll_counts = {k: 0.0 for k in COLLECTIVES}
+    traffic = 0.0
+    for name, ops in parsed.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        fusion_comp = name.startswith("fused_") or ".fused" in name
+        sizes = types[name]
+        for op in ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, sizes)
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                ob = sum(_type_bytes(sizes.get(o, "")) for o in op.operands)
+                coll_bytes[base] += m * ob
+                coll_counts[base] += m
+            if not fusion_comp and (
+                op.opcode in ("fusion", "dot", "convolution", "copy",
+                              "scatter", "gather", "custom-call")
+                or base in COLLECTIVES
+            ):
+                ob = sum(
+                    _operand_read_bytes(op, i, _type_bytes(sizes.get(o, "")))
+                    for i, o in enumerate(op.operands)
+                )
+                traffic += m * (ob + _result_write_bytes(op))
+    trips = {}
+    for name, ops in parsed.items():
+        for op in ops:
+            wm = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", op.attrs)
+            if op.opcode == "while" and wm:
+                trips[wm.group(2)] = trip_count(wm.group(1))
+    return HloStats(
+        flops=flops,
+        collective_bytes=coll_bytes,
+        collective_counts=coll_counts,
+        hbm_traffic_bytes=traffic,
+        while_trips=trips,
+    )

@@ -1,0 +1,192 @@
+"""Roofline analysis from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape) on the single-pod mesh (per assignment):
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips * 819 GB/s HBM)
+    collective = collective_bytes / (chips * 50 GB/s/link ICI)
+
+HLO_FLOPs / bytes / collective bytes come from the loop-aware static HLO
+analysis (benchmarks/hlo_analysis.py) — the records store them *per device*
+(the SPMD program is per-device), so dividing by per-chip peaks directly
+yields seconds.  MODEL_FLOPS is 6*N*D for training (N = active params,
+D = tokens) and 2*N*D for inference, giving the useful-work ratio
+MODEL_FLOPS / HLO_FLOPs that catches remat/padding/redundancy waste, and the
+roofline fraction = useful-compute time / dominant term.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+
+def model_flops_per_device(cfg, cell_name: str, n_devices: int) -> float:
+    from repro.launch.specs import SHAPE_CELLS
+
+    info = SHAPE_CELLS[cell_name]
+    n_active = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        total = 6.0 * n_active * tokens
+    elif info["kind"] == "prefill":
+        seq = info["seq"] if not cfg.is_encdec else max(info["seq"] // 8, 128)
+        tokens = info["batch"] * seq
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * info["batch"]
+    return total / n_devices
+
+
+def analytic_bytes_per_device(cfg, cell_name: str, n_devices: int) -> float:
+    """First-order HBM traffic (napkin math, per device per step).
+
+    Exact for decode (params + whole KV/state cache read once per token);
+    first-order for train/prefill (weights per pass, activation block
+    boundaries, optimizer state, logits).  The HLO-parsed number is an
+    upper bound (fusion operands it cannot prove sliced); the truth lies
+    between — both are reported.
+    """
+    from repro.launch.specs import SHAPE_CELLS
+
+    info = SHAPE_CELLS[cell_name]
+    kind, seq, batch = info["kind"], info["seq"], info["batch"]
+    n_params = cfg.param_count()
+    p_bytes = n_params * 4 / n_devices  # f32 master weights, sharded
+    d = cfg.d_model
+    L = cfg.n_layers
+    bloc_tokens = batch * (seq if kind != "decode" else 1) / n_devices
+
+    act_block = bloc_tokens * d * 2  # bf16 activations at one boundary
+    logits = bloc_tokens * cfg.padded_vocab * 2 / cfg.tp  # vocab-sharded
+
+    # KV/state cache bytes per device (decode reads all of it each step)
+    cache = 0.0
+    n_attn = sum(1 for k in cfg.period if k in ("attn", "dec")) * cfg.n_periods
+    if kind != "train" and n_attn:
+        import numpy as _np
+        kv_elem = _np.dtype(cfg.kv_cache_dtype).itemsize
+        kvb = (batch * seq * cfg.stored_kv_heads * cfg.head_dim * 2 * kv_elem)
+        cache += n_attn * kvb / n_devices
+    n_mamba = sum(1 for k in cfg.period if k == "mamba") * cfg.n_periods
+    if kind != "train" and n_mamba:
+        cache += n_mamba * batch * cfg.ssm_heads * cfg.ssm_head_dim * \
+            cfg.ssm_state * 4 / n_devices
+
+    if kind == "train":
+        # 3 weight passes (fwd, remat fwd, bwd) at bf16-read each, grads f32
+        # r/w, adam m/v r/w, params r/w + ~6 activation touches per layer
+        # boundary + logits fwd/bwd
+        opt_mult = 10.0 if cfg.optimizer == "adamw" else 6.0
+        return (3 * p_bytes / 2 + opt_mult * p_bytes
+                + 6 * L * act_block + 3 * logits)
+    if kind == "prefill":
+        return p_bytes / 2 + 2 * L * act_block + cache + logits
+    # decode
+    return p_bytes / 2 + cache + 2 * act_block * L + logits
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        out.append(rec)
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    from repro.configs import get_config
+
+    la = rec.get("loop_aware", {})
+    if "flops" not in la:
+        return None
+    cfg = get_config(rec["arch"])
+    nd = rec["n_devices"]
+    flops = la["flops"]  # per device
+    hbm_ub = la["hbm_traffic_bytes"]  # HLO-parsed upper bound
+    hbm_lb = analytic_bytes_per_device(cfg, rec["cell"], nd)  # napkin math
+    coll = sum(la["collective_bytes"].values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_lb / HBM_BW  # dominant-term decisions use the analytic
+    t_memory_ub = hbm_ub / HBM_BW  # ...with the parsed bound alongside
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, rec["cell"], nd)
+    t_useful = mf / PEAK_FLOPS
+    frac = t_useful / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    mem = rec.get("memory", {})
+    perdev_gib = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)) / 2**30
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "n_devices": nd,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_ub_s": t_memory_ub,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": frac,
+        "perdev_mem_gib": perdev_gib,
+        "collective_detail_gib": {
+            k: v / 2**30 for k, v in la["collective_bytes"].items() if v
+        },
+    }
+
+
+def build_table(mesh: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_records(mesh):
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | cell | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | roofline frac | mem GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        body += (
+            f"| {r['arch']} | {r['cell']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['perdev_mem_gib']:.1f} |\n"
+        )
+    return hdr + body
+
+
+def main() -> None:
+    rows = build_table("single")
+    out = Path(__file__).parent / "results" / "roofline_single.json"
+    out.write_text(json.dumps(rows, indent=1))
+    print(to_markdown(rows))
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} {r['cell']}: {r['roofline_fraction']:.4f} "
+              f"(dominant {r['dominant']})")
+    collb = sorted(rows, key=lambda r: -(r["t_collective_s"]
+                                         / max(r["t_compute_s"], 1e-12)))[:5]
+    print("most collective-bound (collective/compute):")
+    for r in collb:
+        print(f"  {r['arch']} {r['cell']}: "
+              f"{r['t_collective_s'] / max(r['t_compute_s'], 1e-12):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: Canonical Facet Allocation in five minutes.
+
+Builds the paper's running example (a 3-D skewed jacobi iteration space),
+derives the facet layout from the dependence pattern, runs the tiled
+computation entirely through facet storage, verifies it against the untiled
+oracle, and prints the burst statistics that are the paper's whole point.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.cfa import (
+    AXI_ZC706, TPU_V5E_HBM, BandwidthReport, CFAPipeline, IterSpace, Tiling,
+    bounding_box_plan, build_facet_specs, cfa_plan, get_program,
+    original_layout_plan,
+)
+
+prog = get_program("jacobi2d5p")
+space, tiling = IterSpace((16, 32, 32)), Tiling((8, 8, 8))
+
+# 1. the facet layout, derived from the dependence pattern ------------------
+specs = build_facet_specs(space, prog.deps, tiling)
+print(f"dependence pattern ({len(prog.deps.vectors)} vectors): "
+      f"{prog.deps.vectors}")
+print(f"facet widths w_k = {prog.widths}")
+for k, s in specs.items():
+    print(f"  facet_{k}: shape {s.shape}  outer={s.outer_axes} inner={s.inner_axes}")
+
+# 2. burst plans: CFA vs baselines -----------------------------------------
+for name, plan in [
+    ("CFA", cfa_plan(space, prog.deps, tiling)),
+    ("original", original_layout_plan(space, prog.deps, tiling)),
+    ("bounding-box", bounding_box_plan(space, prog.deps, tiling)),
+]:
+    axi = BandwidthReport.evaluate(plan, AXI_ZC706)
+    tpu = BandwidthReport.evaluate(plan, TPU_V5E_HBM)
+    print(f"{name:>13}: {plan.n_bursts:5d} bursts/tile, "
+          f"redundancy {plan.redundancy:5.1%}, "
+          f"effective bw {axi.peak_fraction_effective:6.1%} (AXI) "
+          f"{tpu.peak_fraction_effective:6.1%} (TPU DMA)")
+
+# 3. run the whole computation through facet storage ------------------------
+pipe = CFAPipeline(prog, space, tiling)
+rng = np.random.default_rng(0)
+inputs = jnp.asarray(rng.normal(size=(1, 32, 32)), jnp.float32)
+facets = pipe.sweep(inputs)
+V = pipe.reference_volume(inputs)
+
+from repro.core.cfa import pack_facet
+err = float(jnp.abs(facets[0][1:] - pack_facet(V, pipe.specs[0])).max())
+print(f"\ntiled-through-facets sweep == untiled oracle: max err {err:.2e}")
+assert err < 1e-5
+print("OK")

@@ -1,0 +1,25 @@
+"""Serving example: batched requests through prefill + facet-layout KV-cache
+decode, with per-phase throughput accounting.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    # delegate to the launcher (same public API a cluster deployment uses)
+    sys.exit(subprocess.call([
+        sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+        "--smoke", "--batch", str(args.batch), "--gen", str(args.gen),
+    ]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Stencil application through the full CFA pipeline + Pallas tile executor.
+
+Runs a gaussian blur (the paper's 5x5 benchmark) over a 2-D grid for several
+time steps: flow-in gathered from facet arrays (contiguous block reads),
+tiles executed by the Pallas kernel (interpret mode on CPU; MXU-tiled on
+TPU), flow-out written as single-burst facet blocks.
+
+    PYTHONPATH=src python examples/stencil_pipeline.py
+"""
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.cfa import CFAPipeline, IterSpace, Tiling, get_program
+from repro.kernels.stencil import execute_tiles
+
+prog = get_program("gaussian")
+space, tiling = IterSpace((4, 32, 32)), Tiling((2, 16, 16))
+pipe = CFAPipeline(prog, space, tiling)
+
+rng = np.random.default_rng(0)
+image = rng.normal(size=(32, 32)).astype(np.float32)
+inputs = jnp.asarray(np.stack([image] * pipe.specs[0].width))
+
+facets = pipe.init_facets(jnp.float32)
+facets = pipe.load_inputs(facets, inputs)
+
+n_kernel_tiles = 0
+for tile in itertools.product(*(range(n) for n in pipe.num_tiles)):
+    H = pipe.copy_in(facets, tile)  # contiguous facet-block reads
+    out = execute_tiles("gaussian", H[None], tiling.sizes, interpret=True)[0]
+    H = H.at[prog.widths[0]:, prog.widths[1]:, prog.widths[2]:].set(out)
+    facets = pipe.copy_out(facets, tile, H)  # single-burst facet writes
+    n_kernel_tiles += 1
+
+V = pipe.reference_volume(inputs)
+from repro.core.cfa import pack_facet
+err = float(jnp.abs(facets[0][1:] - pack_facet(V, pipe.specs[0])).max())
+print(f"{n_kernel_tiles} tiles through the Pallas executor; oracle err {err:.2e}")
+assert err < 1e-4
+print("OK")

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: async, step-atomic, elastically resharded.
+
+Design (1000+-node posture, single-process emulation documented):
+
+* **step-atomic commit**: a checkpoint is written to ``step_N.tmp/`` and
+  atomically renamed to ``step_N/``; a crash mid-write never corrupts the
+  latest checkpoint.
+* **async**: ``save`` snapshots to host memory synchronously (cheap) and
+  writes to disk on a background thread, overlapping I/O with the next
+  training steps (the paper's read/execute/write overlap, applied to
+  checkpoints).
+* **elastic resharding**: the manifest stores only *logical* shapes; restore
+  takes the target abstract tree + the *new* mesh/shardings and
+  ``device_put``s each leaf — restarting on a different pod count or mesh
+  shape reshards transparently.
+* **keep-last-k GC** bounds disk usage.
+
+On a real multi-host cluster each host writes its local shards (same layout,
+one subdirectory per host) — the manifest/commit protocol is unchanged; this
+container's single process writes full arrays.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Future | None = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ save
+
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot now, write asynchronously (unless blocking)."""
+        host_leaves = [np.asarray(l) for l in jax.tree.leaves(tree)]
+        self.wait()  # one outstanding write at a time
+        self._pending = self._pool.submit(self._write, step, host_leaves)
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, leaves: list[np.ndarray]) -> None:
+        tmp = self.dir / f"step_{step:010d}.tmp"
+        final = self.dir / f"step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "leaves.npz", **{f"l{i}": a for i, a in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "n_leaves": len(leaves),
+            "shapes": [list(a.shape) for a in leaves],
+            "dtypes": [str(a.dtype) for a in leaves],
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        with self._lock:
+            steps = sorted(self.all_steps())
+            for s in steps[: -self.keep]:
+                shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # --------------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Rebuild ``target_tree``'s structure from disk; ``shardings`` (an
+        optional matching tree of NamedShardings for the *current* mesh)
+        reshards elastically."""
+        path = self.dir / f"step_{step:010d}"
+        data = np.load(path / "leaves.npz")
+        leaves, treedef = _flatten(target_tree)
+        if len(leaves) != len(data.files):
+            raise ValueError(
+                f"checkpoint has {len(data.files)} leaves, target {len(leaves)} — "
+                "architecture mismatch"
+            )
+        shard_leaves = (
+            jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+            if shardings is not None else [None] * len(leaves)
+        )
+        out = []
+        for i, (tgt, sh) in enumerate(zip(leaves, shard_leaves)):
+            arr = data[f"l{i}"]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"leaf {i}: shape {arr.shape} != {tgt.shape}")
+            arr = arr.astype(tgt.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+        return treedef.unflatten(out)

@@ -1,0 +1,44 @@
+"""Canonical Facet Allocation (CFA) — the paper's core contribution.
+
+Burst-friendly off-chip memory layout for tiled uniform-dependence programs:
+multi-projection facets, single-assignment, data tiling and dimension
+permutation (full-tile / inter-tile / intra-tile contiguity), plus the
+compiler pass that turns a program spec into a read->execute->write pipeline
+and the measurement machinery behind the paper's evaluation.
+"""
+from .spaces import (
+    IterSpace,
+    Deps,
+    Tiling,
+    facet_widths,
+    flow_in_points,
+    flow_out_points,
+    facet_points,
+    neighbor_offsets,
+)
+from .facets import FacetSpec, build_facet_specs, extension_dir
+from .allocation import pack_facet, pack_all, unpack_into
+from .plans import (
+    TransferPlan,
+    count_runs,
+    cfa_plan,
+    original_layout_plan,
+    bounding_box_plan,
+    data_tiling_plan,
+    interior_tile,
+)
+from .bandwidth import BurstModel, BandwidthReport, AXI_ZC706, TPU_V5E_HBM
+from .programs import StencilProgram, PROGRAMS, get_program
+from .transform import CFAPipeline
+
+__all__ = [
+    "IterSpace", "Deps", "Tiling", "facet_widths",
+    "flow_in_points", "flow_out_points", "facet_points", "neighbor_offsets",
+    "FacetSpec", "build_facet_specs", "extension_dir",
+    "pack_facet", "pack_all", "unpack_into",
+    "TransferPlan", "count_runs", "cfa_plan", "original_layout_plan",
+    "bounding_box_plan", "data_tiling_plan", "interior_tile",
+    "BurstModel", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
+    "StencilProgram", "PROGRAMS", "get_program",
+    "CFAPipeline",
+]

@@ -1,0 +1,76 @@
+"""Canonical <-> facet storage conversion in pure JAX.
+
+``pack`` materialises the CFA facet arrays from a canonical (row-major) value
+volume; ``unpack_into`` scatters facet contents back.  Both are compositions
+of reshape / static-take / transpose only (no dynamic gathers), so they jit
+and differentiate cleanly.  They exist for round-trip validation, for
+importing live-in data, and for exporting results — the execution pipeline
+itself (transform.py) writes facet blocks directly and never materialises the
+canonical volume.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .facets import FacetSpec
+
+__all__ = ["pack_facet", "pack_all", "unpack_into"]
+
+
+def _modulo_perm(spec: FacetSpec) -> np.ndarray:
+    """Map slab position j (0..w-1, i.e. x_k = t_k - w + j within the tile) to
+    the paper's modulo coordinate m = x_k mod w.  Requires w | t_k so the
+    labelling is tile-independent (always true for the Table I suite; the
+    sweep executor handles the general case tile-by-tile)."""
+    t_k, w = spec.tile_sizes[spec.axis], spec.width
+    if t_k % w:
+        raise ValueError(
+            f"pack/unpack require w | t on axis {spec.axis} (t={t_k}, w={w}); "
+            "use the sweep executor for tile-dependent modulo labelling"
+        )
+    return np.array([(t_k - w + j) % w for j in range(w)], dtype=np.int64)
+
+
+def _interleaved(spec: FacetSpec, volume_shape: tuple[int, ...]) -> list[int]:
+    shape = []
+    for a in range(spec.ndim):
+        nt = volume_shape[a] // spec.tile_sizes[a]
+        shape += [nt, spec.tile_sizes[a]]
+    return shape
+
+
+def pack_facet(volume: jnp.ndarray, spec: FacetSpec) -> jnp.ndarray:
+    """Extract facet array ``spec`` from a canonical value volume."""
+    d = spec.ndim
+    t_k, w, k = spec.tile_sizes[spec.axis], spec.width, spec.axis
+    W = volume.reshape(_interleaved(spec, volume.shape))  # (q0, r0, q1, r1, ...)
+    rdim = 2 * k + 1
+    # tail slab along axis k, then relabel to the modulo coordinate
+    W = jnp.moveaxis(W, rdim, -1)[..., t_k - w :]
+    perm = _modulo_perm(spec)
+    inv = np.argsort(perm)  # modulo index m -> slab position j
+    W = jnp.moveaxis(W[..., inv], -1, rdim)
+    order = [2 * a for a in spec.outer_axes] + [2 * a + 1 for a in spec.inner_axes]
+    return W.transpose(order)
+
+
+def pack_all(volume: jnp.ndarray, specs: dict[int, FacetSpec]) -> dict[int, jnp.ndarray]:
+    return {k: pack_facet(volume, s) for k, s in specs.items()}
+
+
+def unpack_into(volume: jnp.ndarray, facet: jnp.ndarray, spec: FacetSpec) -> jnp.ndarray:
+    """Scatter a facet array's contents back into a canonical volume."""
+    d = spec.ndim
+    t_k, w, k = spec.tile_sizes[spec.axis], spec.width, spec.axis
+    order = [2 * a for a in spec.outer_axes] + [2 * a + 1 for a in spec.inner_axes]
+    inv_order = np.argsort(order)
+    W = facet.transpose(list(inv_order))  # back to (q0, r0(, modulo on k), ...)
+    rdim = 2 * k + 1
+    perm = _modulo_perm(spec)  # slab position j -> modulo index m
+    W = jnp.moveaxis(jnp.moveaxis(W, rdim, -1)[..., perm], -1, rdim)
+    V = volume.reshape(_interleaved(spec, volume.shape))
+    idx = [slice(None)] * (2 * d)
+    idx[rdim] = slice(t_k - w, t_k)
+    V = V.at[tuple(idx)].set(W)
+    return V.reshape(volume.shape)

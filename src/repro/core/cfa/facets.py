@@ -1,0 +1,173 @@
+"""Facet array specifications: multi-projection, single-assignment, and the
+dimension permutations that give CFA its three contiguity levels (§IV.F-I).
+
+For each canonical axis ``k`` with facet width ``w_k > 0`` we allocate one
+*facet array*.  Its index space is
+
+    [ outer (tile-coordinate) dims, permuted ] x [ inner (intra-tile) dims, permuted ]
+
+with the following paper-faithful layout rules:
+
+* **single-assignment** (§IV-F4): the tile coordinate along ``k`` itself is an
+  outer dimension, so no two tiles share storage; it is placed *first* among
+  the outer dims.
+* **full-tile contiguity** (§IV-G): the inner dims form one contiguous block
+  per tile (data tiling with the iteration tile sizes), so each facet write is
+  a single burst.
+* **inter-tile contiguity** (§IV-H): every facet gets an *extension direction*
+  ``c_k`` (a projected axis).  The tile coordinate of ``c_k`` is the last
+  outer dim and ``c_k`` itself is the first inner dim, so a read that spans
+  the facet of tile ``q`` and the trailing slab of tile ``q - e_{c_k}`` is one
+  contiguous run ("facet extensions", Fig. 8).
+* **intra-tile contiguity** (§IV-I): the modulo dimension ``x_k mod w_k`` is
+  the last inner dim, so corner sets from 3rd-level neighbours are contiguous
+  suffixes of a facet block.
+
+We assign extension directions cyclically, ``c_k = (k+1) mod d``; for d = 3
+this reproduces exactly the paper's final layout family
+
+    facet_i[ii][kk][jj] [j][k]          (w_i folded away when w_i == 1)
+    facet_j[jj][ii][kk] [k][i][j%w_j]
+    facet_k[kk][jj][ii] [i][j][k%w_k]
+
+and yields the paper's 4-bursts-per-3D-tile read plan.  For d >= 4 some
+k-th-level neighbours cannot be merged (paper §IV-J) — the planner then simply
+counts the extra bursts; nothing breaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .spaces import Deps, IterSpace, Tiling, facet_widths
+
+__all__ = ["FacetSpec", "build_facet_specs", "extension_dir"]
+
+
+def extension_dir(axis: int, ndim: int) -> int:
+    """Cyclic inter-tile contiguity direction ``c_k = (k+1) mod d``."""
+    if ndim == 1:
+        return axis  # degenerate: no projected axes; unused
+    return (axis + 1) % ndim
+
+
+@dataclasses.dataclass(frozen=True)
+class FacetSpec:
+    """Layout of one facet array (normal axis ``axis``, thickness ``width``)."""
+
+    axis: int
+    width: int
+    tile_sizes: tuple[int, ...]
+    num_tiles: tuple[int, ...]
+    outer_axes: tuple[int, ...]  # order of tile-coordinate dims
+    inner_axes: tuple[int, ...]  # order of intra-tile dims; ``axis`` = modulo dim
+
+    @property
+    def ndim(self) -> int:
+        return len(self.tile_sizes)
+
+    def inner_size(self, a: int) -> int:
+        return self.width if a == self.axis else self.tile_sizes[a]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Array shape: outer (tile) dims then inner (intra-tile) dims."""
+        return tuple(self.num_tiles[a] for a in self.outer_axes) + tuple(
+            self.inner_size(a) for a in self.inner_axes
+        )
+
+    @property
+    def block_elems(self) -> int:
+        """Elements in one tile's facet block (one burst write)."""
+        return math.prod(self.inner_size(a) for a in self.inner_axes)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    # ---- address maps ----------------------------------------------------
+
+    def domain_mask(self, pts: np.ndarray) -> np.ndarray:
+        """Which iteration points lie in this facet's projection domain
+        ``D(p_k) = { x : t_k - w_k <= x_k mod t_k }`` (§IV-F3)."""
+        t_k = self.tile_sizes[self.axis]
+        return (pts[:, self.axis] % t_k) >= (t_k - self.width)
+
+    def coords(self, pts: np.ndarray) -> np.ndarray:
+        """Facet-array multi-indices for iteration points (must be in domain).
+
+        Applies the modulo projection ``p_k(x) = (..., x_k mod w_k, ...)``
+        composed with data tiling and the dimension permutations.
+        """
+        pts = np.atleast_2d(np.asarray(pts, dtype=np.int64))
+        if not bool(self.domain_mask(pts).all()):
+            raise ValueError(f"points outside facet_{self.axis} projection domain")
+        t = np.asarray(self.tile_sizes, dtype=np.int64)
+        q = pts // t  # tile coordinates
+        r = pts % t  # intra-tile coordinates
+        cols = []
+        for a in self.outer_axes:
+            cols.append(q[:, a])
+        for a in self.inner_axes:
+            if a == self.axis:
+                cols.append(pts[:, a] % self.width)  # paper's modulo projection
+            else:
+                cols.append(r[:, a])
+        return np.stack(cols, axis=1)
+
+    def offsets(self, pts: np.ndarray) -> np.ndarray:
+        """Row-major linear offsets within the facet array for iteration points."""
+        idx = self.coords(pts)
+        strides = np.ones(len(self.shape), dtype=np.int64)
+        for i in range(len(self.shape) - 2, -1, -1):
+            strides[i] = strides[i + 1] * self.shape[i + 1]
+        return idx @ strides
+
+    def block_start(self, tile: Sequence[int]) -> int:
+        """Linear offset of the first element of tile T's facet block."""
+        strides = np.ones(len(self.shape), dtype=np.int64)
+        for i in range(len(self.shape) - 2, -1, -1):
+            strides[i] = strides[i + 1] * self.shape[i + 1]
+        q = np.asarray(tile, dtype=np.int64)
+        idx = np.array([q[a] for a in self.outer_axes], dtype=np.int64)
+        return int(idx @ strides[: len(self.outer_axes)])
+
+
+def build_facet_specs(
+    space: IterSpace, deps: Deps, tiling: Tiling
+) -> dict[int, FacetSpec]:
+    """Construct the CFA facet family for a (space, deps, tiling) triple."""
+    d = space.ndim
+    widths = facet_widths(deps)
+    nt = tiling.num_tiles(space)
+    specs: dict[int, FacetSpec] = {}
+    for k in range(d):
+        w = widths[k]
+        if w <= 0:
+            continue
+        if w > tiling.sizes[k]:
+            raise ValueError(
+                f"facet width {w} exceeds tile size {tiling.sizes[k]} on axis {k}; "
+                "tiles must be at least as deep as the dependence pattern"
+            )
+        c = extension_dir(k, d)
+        # outer: k first (single-assignment axis), others ascending, c's tile
+        # coordinate last (inter-tile contiguity).
+        rest = [a for a in range(d) if a not in (k, c)]
+        outer = (k, *rest, c) if c != k else (k, *rest)
+        # inner: c first (extension dim), other projected axes ascending,
+        # modulo dim (axis k) last (intra-tile contiguity).
+        mids = [a for a in range(d) if a not in (k, c)]
+        inner = (c, *mids, k) if c != k else (*mids, k)
+        specs[k] = FacetSpec(
+            axis=k,
+            width=w,
+            tile_sizes=tuple(tiling.sizes),
+            num_tiles=nt,
+            outer_axes=outer,
+            inner_axes=inner,
+        )
+    return specs

@@ -1,0 +1,125 @@
+"""Multi-port facet distribution — the paper's stated future work (§VII):
+
+    "the machine model we have considered may be extended to multi-port
+     memory accesses, such as high-bandwidth memory ... one has to find an
+     adequate repartition of data over each memory port to balance accesses."
+
+On TPU-class HBM the analogue is distributing the facet arrays across HBM
+channels (or, across chips, the sharding of facet arrays over a mesh axis).
+Because CFA gives every facet a *static, per-tile-uniform* transfer size,
+the balance problem is a deterministic multiprocessor-scheduling instance:
+assign facet arrays (the unit of contiguity) to ports so the heaviest port
+carries the least possible bytes per tile.
+
+``assign_ports`` implements LPT (longest-processing-time greedy, 4/3-optimal)
+over per-tile facet traffic derived from the burst plans; ``port_speedup``
+evaluates the resulting aggregate-bandwidth gain under the burst model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .bandwidth import BurstModel
+from .facets import build_facet_specs
+from .plans import cfa_plan, interior_tile
+from .spaces import Deps, IterSpace, Tiling
+
+__all__ = ["PortAssignment", "assign_ports", "port_speedup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PortAssignment:
+    n_ports: int
+    facet_to_port: dict[int, int]  # facet axis -> port id
+    port_bytes: tuple[float, ...]  # per-tile traffic per port (elements)
+
+    @property
+    def balance(self) -> float:
+        """max port load / mean port load (1.0 = perfect)."""
+        loads = np.asarray(self.port_bytes)
+        mean = loads.mean() if loads.size else 0.0
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+
+def _facet_traffic(space: IterSpace, deps: Deps, tiling: Tiling) -> dict[int, float]:
+    """Per-tile elements moved per facet array (write block + its share of
+    the read plan, which CFA's host assignment makes per-facet exact)."""
+    specs = build_facet_specs(space, deps, tiling)
+    tile = interior_tile(space, tiling)
+    from .plans import _assign_hosts, flow_in_points
+    from .spaces import facet_widths
+
+    widths = facet_widths(deps)
+    fin = flow_in_points(space, deps, tiling, tile)
+    hosts = _assign_hosts(fin, tile, tiling, widths, specs)
+    traffic = {}
+    for k, spec in specs.items():
+        traffic[k] = float(spec.block_elems)  # flow-out write
+        traffic[k] += float(hosts[k].size)  # flow-in reads served by facet k
+    return traffic
+
+
+def assign_ports(space: IterSpace, deps: Deps, tiling: Tiling,
+                 n_ports: int) -> PortAssignment:
+    traffic = _facet_traffic(space, deps, tiling)
+    loads = [0.0] * n_ports
+    assign = {}
+    for k in sorted(traffic, key=lambda k: -traffic[k]):  # LPT greedy
+        p = int(np.argmin(loads))
+        assign[k] = p
+        loads[p] += traffic[k]
+    return PortAssignment(n_ports, assign, tuple(loads))
+
+
+def port_speedup(space: IterSpace, deps: Deps, tiling: Tiling,
+                 n_ports: int, model: BurstModel) -> dict:
+    """Aggregate-bandwidth gain of an n-port split vs a single port.
+
+    Each port serves its facets' bursts independently; tile time = the
+    slowest port (ports run concurrently, the paper's balance objective)."""
+    plan = cfa_plan(space, deps, tiling)
+    t_single = model.time_s(plan.read_runs) + model.time_s(plan.write_runs)
+
+    pa = assign_ports(space, deps, tiling, n_ports)
+    specs = build_facet_specs(space, deps, tiling)
+    # apportion the plan's runs to ports: writes are per facet (one each, in
+    # ascending facet order by construction); reads via the host assignment.
+    write_runs_by_port = [[] for _ in range(n_ports)]
+    for k, run in zip(sorted(specs), plan.write_runs):
+        write_runs_by_port[pa.facet_to_port[k]].append(run)
+    # reads: split proportionally to per-facet read traffic
+    from .plans import _assign_hosts, flow_in_points
+    from .spaces import facet_widths
+
+    tile = interior_tile(space, tiling)
+    hosts = _assign_hosts(flow_in_points(space, deps, tiling, tile), tile,
+                          tiling, facet_widths(deps), specs)
+    read_runs_by_port = [[] for _ in range(n_ports)]
+    runs = list(plan.read_runs)
+    # plan.read_runs were emitted per-facet in specs order inside cfa_plan
+    idx = 0
+    for k in specs:
+        n_k = 1 if hosts[k].size else 0
+        # boxed mode merges each facet's reads into ~1 burst; attribute
+        # remaining runs round-robin if counts diverge
+        take = runs[idx: idx + max(n_k, 0)]
+        idx += len(take)
+        read_runs_by_port[pa.facet_to_port[k]].extend(take)
+    for r in runs[idx:]:
+        read_runs_by_port[int(np.argmin([sum(x) for x in read_runs_by_port]))].append(r)
+
+    t_ports = max(
+        model.time_s(tuple(wr)) + model.time_s(tuple(rr))
+        for wr, rr in zip(write_runs_by_port, read_runs_by_port)
+    )
+    return {
+        "n_ports": n_ports,
+        "balance": pa.balance,
+        "t_single_us": 1e6 * t_single,
+        "t_multi_us": 1e6 * t_ports,
+        "speedup": t_single / t_ports if t_ports else 1.0,
+        "assignment": pa.facet_to_port,
+    }

@@ -1,0 +1,186 @@
+"""The paper's Table I benchmark suite as uniform-dependence program specs.
+
+Each program is given in the *post-skew normal form* the paper assumes
+(§IV-E: "we expect such a pre-processing to have been done"): a rectangular
+iteration space with all dependence vectors backwards in every dimension.
+The skew applied to each classic benchmark is recorded in ``skew`` so that
+tests can relate the skewed recurrence back to the textbook stencil.
+
+Iteration semantics: axis 0 is the (skewed) time axis; ``plane_update``
+computes the value plane at time ``s`` from the ``depth`` previous planes,
+where each previous plane is passed *with its backward halo attached* (halo
+width ``w_a`` on the low side of each spatial axis ``a``).  Out-of-space
+reads are zero (Dirichlet boundary), making the recurrence total on the
+rectangular space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .spaces import Deps, IterSpace, Tiling, facet_widths
+
+__all__ = ["StencilProgram", "PROGRAMS", "get_program"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProgram:
+    """A uniform-dependence benchmark in post-skew normal form."""
+
+    name: str
+    deps: Deps
+    default_tile: tuple[int, ...]
+    paper_tiles: tuple[tuple[int, ...], ...]  # Table I tile-size sweep corners
+    equivalent_app: str
+    skew: tuple[int, ...]  # spatial skew factors applied per spatial axis
+    # update: (prev_planes [depth][spatial+halo], widths) -> new plane [spatial]
+    plane_update: Callable[[Sequence[jnp.ndarray], tuple[int, ...]], jnp.ndarray]
+
+    @property
+    def ndim(self) -> int:
+        return self.deps.ndim
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return facet_widths(self.deps)
+
+    def space(self, sizes: Sequence[int]) -> IterSpace:
+        return IterSpace(tuple(sizes))
+
+    def tiling(self, sizes: Sequence[int] | None = None) -> Tiling:
+        return Tiling(tuple(sizes) if sizes is not None else self.default_tile)
+
+
+def _shift2(prev: jnp.ndarray, di: int, dj: int, w: tuple[int, ...]) -> jnp.ndarray:
+    """Read ``prev`` (with low-side halo (w1, w2)) at spatial offset (di, dj),
+    di, dj <= 0, returning the interior-sized plane."""
+    w1, w2 = w[1], w[2]
+    t1 = prev.shape[0] - w1
+    t2 = prev.shape[1] - w2
+    return jnp.asarray(prev)[w1 + di : w1 + di + t1, w2 + dj : w2 + dj + t2]
+
+
+def _jacobi_update(offsets: Sequence[tuple[int, int]], coeffs: Sequence[float]):
+    def update(prev_planes: Sequence[jnp.ndarray], w: tuple[int, ...]) -> jnp.ndarray:
+        p = prev_planes[-1]  # plane s-1 (depth-1 history used by jacobi family)
+        acc = None
+        for (di, dj), c in zip(offsets, coeffs):
+            v = _shift2(p, di, dj, w) * float(c)  # python float: no promotion
+            acc = v if acc is None else acc + v
+        return acc
+
+    return update
+
+
+# --- jacobi2d5p: 5-point Laplace; skew (1,1) -> deps (-1, di-1, dj-1) -------
+_J5_OFF = [(-1, -1), (0, -1), (-2, -1), (-1, 0), (-1, -2)]
+_J5 = Deps(tuple((-1, a, b) for a, b in _J5_OFF))
+
+# --- jacobi2d9p: 3x3 convolution; skew (1,1) --------------------------------
+_J9_OFF = [(a - 1, b - 1) for a in (-1, 0, 1) for b in (-1, 0, 1)]
+_J9 = Deps(tuple((-1, a, b) for a, b in _J9_OFF))
+
+# --- gaussian: 5x5 blur; skew (2,2) -> 25 deps ------------------------------
+_GA_OFF = [(a - 2, b - 2) for a in range(-2, 3) for b in range(-2, 3)]
+_GA = Deps(tuple((-1, a, b) for a, b in _GA_OFF))
+_GA_K = np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]).astype(np.float64)
+_GA_K /= _GA_K.sum()
+
+# --- smith-waterman-3seq: 3-sequence alignment; skew s = i+j+k --------------
+# original deps: the 7 nonzero corners of {0,-1}^3; skewed by s = i+j+k they
+# become (sum, j, k)-space vectors, all strictly backwards on axis 0.
+_SW_RAW = [
+    (-1, 0, 0), (0, -1, 0), (0, 0, -1),
+    (-1, -1, 0), (-1, 0, -1), (0, -1, -1), (-1, -1, -1),
+]
+_SW = Deps(tuple((a + b + c, b, c) for a, b, c in _SW_RAW))
+
+
+def _sw_update(prev_planes: Sequence[jnp.ndarray], w: tuple[int, ...]) -> jnp.ndarray:
+    """Max-plus alignment recurrence on the skewed lattice (depth 3)."""
+    # deps at axis-0 distance 1: (j,k) offsets (0,0),(-1,0),(0,-1)
+    # distance 2: (-1,0),(0,-1),(-1,-1);   distance 3: (-1,-1)
+    p1, p2, p3 = prev_planes[-1], prev_planes[-2], prev_planes[-3]
+    cands = [
+        _shift2(p1, 0, 0, w) + 1.0,
+        _shift2(p1, -1, 0, w) + 1.0,
+        _shift2(p1, 0, -1, w) + 1.0,
+        _shift2(p2, -1, 0, w) + 2.0,
+        _shift2(p2, 0, -1, w) + 2.0,
+        _shift2(p2, -1, -1, w) + 2.0,
+        _shift2(p3, -1, -1, w) + 3.0,
+    ]
+    out = cands[0]
+    for c in cands[1:]:
+        out = jnp.maximum(out, c)
+    return out
+
+
+def _gol_update(prev_planes: Sequence[jnp.ndarray], w: tuple[int, ...]) -> jnp.ndarray:
+    """2nd-order finite difference flavoured 9-point update (jacobi2d9p-gol)."""
+    p = prev_planes[-1]
+    neigh = None
+    for (di, dj) in _J9_OFF:
+        v = _shift2(p, di, dj, w)
+        neigh = v if neigh is None else neigh + v
+    centre = _shift2(p, -1, -1, w)
+    return 2.0 * centre - neigh / 9.0
+
+
+PROGRAMS: dict[str, StencilProgram] = {
+    "jacobi2d5p": StencilProgram(
+        name="jacobi2d5p",
+        deps=_J5,
+        default_tile=(16, 16, 16),
+        paper_tiles=((16, 16, 16), (32, 32, 32), (64, 64, 64), (128, 128, 128)),
+        equivalent_app="Laplace equation",
+        skew=(1, 1),
+        plane_update=_jacobi_update(_J5_OFF, [0.2] * 5),
+    ),
+    "jacobi2d9p": StencilProgram(
+        name="jacobi2d9p",
+        deps=_J9,
+        default_tile=(16, 16, 16),
+        paper_tiles=((16, 16, 16), (32, 32, 32), (64, 64, 64), (128, 128, 128)),
+        equivalent_app="3x3 convolution",
+        skew=(1, 1),
+        plane_update=_jacobi_update(_J9_OFF, [1.0 / 9.0] * 9),
+    ),
+    "jacobi2d9p-gol": StencilProgram(
+        name="jacobi2d9p-gol",
+        deps=_J9,
+        default_tile=(16, 16, 16),
+        paper_tiles=((16, 16, 16), (32, 32, 32), (64, 64, 64), (128, 128, 128)),
+        equivalent_app="2nd-order finite difference",
+        skew=(1, 1),
+        plane_update=_gol_update,
+    ),
+    "gaussian": StencilProgram(
+        name="gaussian",
+        deps=_GA,
+        default_tile=(4, 16, 16),
+        paper_tiles=((4, 16, 16), (4, 32, 32), (4, 64, 64), (4, 128, 128)),
+        equivalent_app="5x5 Gaussian Blur",
+        skew=(2, 2),
+        plane_update=_jacobi_update(_GA_OFF, list(_GA_K.ravel())),
+    ),
+    "smith-waterman-3seq": StencilProgram(
+        name="smith-waterman-3seq",
+        deps=_SW,
+        default_tile=(16, 16, 16),
+        paper_tiles=((16, 16, 16), (32, 32, 32), (64, 64, 64), (128, 128, 128)),
+        equivalent_app="Alignment of 3 sequences",
+        skew=(0, 0),  # skew folded into axis 0 = i+j+k
+        plane_update=_sw_update,
+    ),
+}
+
+
+def get_program(name: str) -> StencilProgram:
+    try:
+        return PROGRAMS[name]
+    except KeyError:
+        raise KeyError(f"unknown benchmark {name!r}; have {sorted(PROGRAMS)}") from None

@@ -1,0 +1,277 @@
+"""The CFA "compiler pass" output: a read -> execute -> write tile pipeline.
+
+Mirrors §V of the paper.  Given a :class:`StencilProgram` (post-skew normal
+form), a rectangular space and a tiling, :class:`CFAPipeline` provides
+
+* ``init_facets``  — allocate the facet arrays (plus one virtual leading
+  block row on the time facet holding live-in planes),
+* ``copy_in``      — gather a tile's flow-in from facets into a local halo
+  buffer (the on-chip scratchpad; off-chip side reads facet blocks),
+* ``execute_tile`` — run the tile's plane recurrence on the halo buffer,
+* ``copy_out``     — write the tile's facet blocks (full-tile contiguity:
+  each is one contiguous store),
+* ``sweep``        — the whole accelerator loop over tiles in lexicographic
+  order (the legal schedule under backward dependences).
+
+On real hardware the three phases run as a coarse-grain pipeline
+(paper Fig. 13, DATAFLOW); in Pallas the same overlap comes for free from
+grid pipelining — see ``repro.kernels.stencil``.  This module is the
+correctness/reference path and is deliberately written tile-by-tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Mapping
+
+import numpy as np
+import jax.numpy as jnp
+
+from .facets import FacetSpec, build_facet_specs
+from .programs import StencilProgram
+from .spaces import IterSpace, Tiling, box_points
+
+__all__ = ["CFAPipeline"]
+
+
+@dataclasses.dataclass
+class CFAPipeline:
+    program: StencilProgram
+    space: IterSpace
+    tiling: Tiling
+    specs: Mapping[int, FacetSpec] = dataclasses.field(init=False)
+    num_tiles: tuple[int, ...] = dataclasses.field(init=False)
+
+    def __post_init__(self) -> None:
+        if self.space.ndim != 3:
+            raise ValueError("the reference executor supports 3-D programs (Table I)")
+        self.specs = build_facet_specs(self.space, self.program.deps, self.tiling)
+        self.num_tiles = self.tiling.num_tiles(self.space)
+        if 0 not in self.specs:
+            raise ValueError("time axis must carry a facet (w_0 >= 1)")
+
+    # -- storage -----------------------------------------------------------
+
+    def facet_shape(self, k: int) -> tuple[int, ...]:
+        shape = list(self.specs[k].shape)
+        if k == 0:
+            shape[0] += 1  # virtual leading block row for live-in planes
+        return tuple(shape)
+
+    def init_facets(self, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
+        return {k: jnp.zeros(self.facet_shape(k), dtype) for k in self.specs}
+
+    def load_inputs(
+        self, facets: dict[int, jnp.ndarray], inputs: jnp.ndarray
+    ) -> dict[int, jnp.ndarray]:
+        """Pack live-in planes (w_0, N_1, N_2) into the virtual facet_0 row."""
+        spec = self.specs[0]
+        w0 = spec.width
+        if inputs.shape != (w0, *self.space.sizes[1:]):
+            raise ValueError(f"inputs must be {(w0, *self.space.sizes[1:])}")
+        f0 = facets[0]
+        t = self.tiling.sizes
+        for q1 in range(self.num_tiles[1]):
+            for q2 in range(self.num_tiles[2]):
+                blk = inputs[:, q1 * t[1] : (q1 + 1) * t[1], q2 * t[2] : (q2 + 1) * t[2]]
+                f0 = self._store_block(f0, spec, (-1, q1, q2), blk, virtual=True)
+        facets = dict(facets)
+        facets[0] = f0
+        return facets
+
+    # -- block addressing ----------------------------------------------------
+
+    def _block_index(self, spec: FacetSpec, tile: tuple[int, ...], virtual: bool):
+        idx = []
+        for a in spec.outer_axes:
+            q = tile[a]
+            if spec.axis == 0 and a == 0:
+                q += 1  # shift for the virtual live-in row
+            idx.append(q)
+        return tuple(idx)
+
+    def _store_block(self, arr, spec: FacetSpec, tile, slab, *, virtual=False):
+        """``slab`` has canonical axis order with axis ``spec.axis`` of size w
+        indexed by slab position; store it permuted to the facet block layout
+        with the paper's (tile-dependent, in general) modulo labelling."""
+        k, w, t_k = spec.axis, spec.width, spec.tile_sizes[spec.axis]
+        x0 = tile[k] * t_k + t_k - w if not virtual else -w
+        perm = np.argsort([(x0 + j) % w for j in range(w)])  # m -> slab j
+        slab = jnp.take(slab, jnp.asarray(perm), axis=k)
+        block = slab.transpose([a for a in spec.inner_axes])
+        return arr.at[self._block_index(spec, tile, virtual)].set(block)
+
+    # -- copy-in -------------------------------------------------------------
+
+    def _halo_maps(self, tile: tuple[int, ...]):
+        """Static gather maps: halo point -> (facet id, flat offset).
+
+        Halo = points of [lo - w, hi) with some coordinate below lo.  Points
+        with x_0 < 0 come from the virtual live-in row; points outside the
+        space elsewhere keep the zero boundary value.
+        """
+        w = np.array([self.specs[a].width if a in self.specs else 0 for a in range(3)])
+        lo = np.array(tile) * np.array(self.tiling.sizes)
+        hi = lo + np.array(self.tiling.sizes)
+        pts = box_points(lo - w, hi)
+        below = (pts < lo).any(axis=1)
+        pts = pts[below]
+        # spatially out-of-space points are zero-boundary; x_0 < 0 is live-in
+        in_space = np.ones(len(pts), dtype=bool)
+        for a in range(1, 3):
+            in_space &= (pts[:, a] >= 0) & (pts[:, a] < self.space.sizes[a])
+        in_space &= pts[:, 0] < self.space.sizes[0]
+        pts = pts[in_space]
+        maps = {}
+        taken = np.zeros(len(pts), dtype=bool)
+        # virtual live-in reads
+        virt = pts[:, 0] < 0
+        if virt.any():
+            maps["virtual"] = pts[virt]
+            taken |= virt
+        for k, spec in self.specs.items():
+            mask = ~taken & (pts[:, k] < lo[k]) & (pts[:, k] >= 0) & spec.domain_mask(pts)
+            if mask.any():
+                maps[k] = pts[mask]
+                taken |= mask
+        if not bool(taken.all()):
+            raise AssertionError("halo point not covered by any facet — layout bug")
+        return maps, lo, w
+
+    def copy_in(self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...]) -> jnp.ndarray:
+        """Gather the tile's flow-in into a halo buffer of shape (w + t)."""
+        maps, lo, w = self._halo_maps(tile)
+        t = np.array(self.tiling.sizes)
+        H = jnp.zeros(tuple(w + t), facets[0].dtype)
+        for key, pts in maps.items():
+            if key == "virtual":
+                spec = self.specs[0]
+                vals = self._gather_virtual(facets[0], spec, pts)
+            else:
+                spec = self.specs[key]
+                flat = facets[key].reshape(-1)
+                offs = spec.offsets(pts)
+                if key == 0:  # account for the virtual leading row
+                    offs = offs + spec.block_elems * math.prod(
+                        spec.num_tiles[a] for a in spec.outer_axes[1:]
+                    )
+                vals = flat[jnp.asarray(offs)]
+            local = pts - (lo - w)
+            H = H.at[tuple(jnp.asarray(local.T))].set(vals)
+        return H
+
+    def _gather_virtual(self, f0, spec: FacetSpec, pts: np.ndarray):
+        """Read live-in points (x_0 < 0) from the virtual facet_0 row."""
+        w = spec.width
+        idx_cols = []
+        shape = self.facet_shape(0)
+        for a in spec.outer_axes:
+            idx_cols.append(
+                np.zeros(len(pts), np.int64) if a == 0 else pts[:, a] // spec.tile_sizes[a]
+            )
+        for a in spec.inner_axes:
+            if a == 0:
+                idx_cols.append(pts[:, 0] % w)  # matches the store perm for x0=-w..-1
+            else:
+                idx_cols.append(pts[:, a] % spec.tile_sizes[a])
+        idx = np.stack(idx_cols, axis=1)
+        strides = np.ones(len(shape), np.int64)
+        for i in range(len(shape) - 2, -1, -1):
+            strides[i] = strides[i + 1] * shape[i + 1]
+        return f0.reshape(-1)[jnp.asarray(idx @ strides)]
+
+    # -- execute ---------------------------------------------------------------
+
+    def execute_tile(self, H: jnp.ndarray) -> jnp.ndarray:
+        """Run the plane recurrence over the halo buffer; returns the filled
+        buffer (interior planes computed in place)."""
+        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        t = self.tiling.sizes
+        depth = w[0]
+        for s in range(t[0]):
+            prev = [H[w[0] + s - m] for m in range(depth, 0, -1)]
+            plane = self.program.plane_update(prev, w)
+            H = H.at[w[0] + s, w[1] :, w[2] :].set(plane)
+        return H
+
+    # -- copy-out ---------------------------------------------------------------
+
+    def copy_out(
+        self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...], H: jnp.ndarray
+    ) -> dict[int, jnp.ndarray]:
+        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        t = self.tiling.sizes
+        interior = H[w[0] :, w[1] :, w[2] :]
+        out = dict(facets)
+        for k, spec in self.specs.items():
+            sl = [slice(None)] * 3
+            sl[k] = slice(t[k] - spec.width, t[k])
+            out[k] = self._store_block(out[k], spec, tile, interior[tuple(sl)])
+        return out
+
+    # -- full sweep ----------------------------------------------------------------
+
+    def sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
+        """Run the whole tiled computation through facet storage."""
+        facets = self.init_facets(dtype)
+        facets = self.load_inputs(facets, inputs.astype(dtype))
+        for tile in itertools.product(*(range(n) for n in self.num_tiles)):
+            H = self.copy_in(facets, tile)
+            H = self.execute_tile(H)
+            facets = self.copy_out(facets, tile, H)
+        return facets
+
+    # -- wavefront-parallel sweep ------------------------------------------------
+
+    def wavefronts(self) -> list[list[tuple[int, ...]]]:
+        """Tiles grouped by wavefront (sum of tile coordinates).
+
+        All backward-neighbour dependencies strictly decrease the coordinate
+        sum, so tiles within one wavefront are independent — the tile-level
+        parallelism the paper's task pipeline generalises to on a machine
+        with many cores/ports."""
+        waves: dict[int, list[tuple[int, ...]]] = {}
+        for tile in itertools.product(*(range(n) for n in self.num_tiles)):
+            waves.setdefault(sum(tile), []).append(tile)
+        return [waves[s] for s in sorted(waves)]
+
+    def sweep_wavefront(self, inputs: jnp.ndarray, dtype=jnp.float32,
+                        use_kernel: bool = False) -> dict[int, jnp.ndarray]:
+        """Wavefront-parallel sweep: each wave's tiles execute as one batch
+        (through the Pallas tile executor when ``use_kernel``)."""
+        facets = self.init_facets(dtype)
+        facets = self.load_inputs(facets, inputs.astype(dtype))
+        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        for wave in self.wavefronts():
+            halos = jnp.stack([self.copy_in(facets, t) for t in wave])
+            if use_kernel:
+                from repro.kernels.stencil import execute_tiles
+
+                interiors = execute_tiles(self.program.name, halos,
+                                          self.tiling.sizes, interpret=True)
+                outs = []
+                for i in range(len(wave)):
+                    H = halos[i].at[w[0]:, w[1]:, w[2]:].set(interiors[i])
+                    outs.append(H)
+            else:
+                outs = [self.execute_tile(halos[i]) for i in range(len(wave))]
+            for tile, H in zip(wave, outs):
+                facets = self.copy_out(facets, tile, H)
+        return facets
+
+    # -- oracle ----------------------------------------------------------------
+
+    def reference_volume(self, inputs: jnp.ndarray) -> jnp.ndarray:
+        """Untiled plane-by-plane sweep over the full space (the oracle)."""
+        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        N = self.space.sizes
+        depth = w[0]
+        hist = [jnp.asarray(inputs[m]) for m in range(depth)]  # planes -w0..-1
+        planes = []
+        for _ in range(N[0]):
+            padded = [jnp.pad(h, ((w[1], 0), (w[2], 0))) for h in hist]
+            new = self.program.plane_update(padded, w)
+            planes.append(new)
+            hist = hist[1:] + [new] if depth > 1 else [new]
+        return jnp.stack(planes)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each subpackage follows the <name>.py (pl.pallas_call + BlockSpec) /
+ops.py (jit'd wrapper) / ref.py (pure-jnp oracle) convention.
+"""

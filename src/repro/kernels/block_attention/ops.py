@@ -1,0 +1,41 @@
+"""Public ops for the facet-layout KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .block_attention import decode_attention
+from .ref import decode_attention_ref, blockify, deblockify
+
+__all__ = [
+    "decode_attention",
+    "decode_attention_ref",
+    "blockify",
+    "deblockify",
+    "append_token",
+]
+
+
+def append_token(
+    k_blocks: jnp.ndarray,  # (B, nb, Hkv, bs, D)
+    v_blocks: jnp.ndarray,
+    k_new: jnp.ndarray,  # (B, Hkv, D)
+    v_new: jnp.ndarray,
+    position: jnp.ndarray,  # scalar int32 — write position (same for the batch)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Append one token's KV at ``position``: a single in-block write per head
+    (the CFA flow-out stance — all writes are block-local and contiguous)."""
+    bs = k_blocks.shape[3]
+    position = jnp.asarray(position, jnp.int32)
+    blk = position // bs
+    row = position % bs
+    zero = jnp.int32(0)
+
+    def upd(blocks, new):
+        # (B, nb, Hkv, bs, D) <- (B, 1, Hkv, 1, D) at (0, blk, 0, row, 0)
+        return jax.lax.dynamic_update_slice(
+            blocks, new[:, None, :, None, :],
+            (zero, blk, zero, row, zero),
+        )
+
+    return upd(k_blocks, k_new), upd(v_blocks, v_new)

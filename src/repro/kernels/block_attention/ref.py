@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for block-layout (facet) KV-cache decode attention.
+
+The reference computes standard GQA decode attention over a *canonical*
+``(B, S, Hkv, D)`` cache; the kernel computes the same function over the CFA
+block layout ``(B, nb, Hkv, bs, D)``.  ``blockify``/``deblockify`` are the
+layout converters (the analogue of ``pack``/``unpack`` for the KV "facets":
+the sequence axis is tiled, the block index is the single-assignment outer
+dimension, and each ``(bs, D)`` extent is one contiguous burst).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref", "blockify", "deblockify"]
+
+
+def blockify(cache: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, nb, Hkv, bs, D); S must divide by block_size."""
+    B, S, H, D = cache.shape
+    assert S % block_size == 0
+    nb = S // block_size
+    return cache.reshape(B, nb, block_size, H, D).transpose(0, 1, 3, 2, 4)
+
+
+def deblockify(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(B, nb, Hkv, bs, D) -> (B, S, Hkv, D)."""
+    B, nb, H, bs, D = blocks.shape
+    return blocks.transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, H, D)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D) canonical layout
+    v_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    lengths: jnp.ndarray,  # (B,) int32 — valid prefix length per sequence
+) -> jnp.ndarray:  # (B, Hq, D)
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / jnp.sqrt(D).astype(jnp.float32)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(B, Hq, D).astype(q.dtype)

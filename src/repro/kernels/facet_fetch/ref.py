@@ -1,0 +1,20 @@
+"""Oracle for the facet-fetch kernel: the exact gather-based copy-in."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cfa import CFAPipeline, IterSpace, Tiling
+from repro.core.cfa.programs import get_program
+
+
+def fetch_interior_halos_ref(program_name, facets, space, tile):
+    prog = get_program(program_name)
+    pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
+    nt = pipe.num_tiles
+    outs = []
+    for q0 in range(1, nt[0]):
+        for q1 in range(1, nt[1]):
+            for q2 in range(1, nt[2]):
+                outs.append(pipe.copy_in(facets, (q0, q1, q2)))
+    H = jnp.stack(outs)
+    return H.reshape(nt[0] - 1, nt[1] - 1, nt[2] - 1, *outs[0].shape)

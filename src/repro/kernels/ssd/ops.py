@@ -1,0 +1,29 @@
+"""Public ops for the SSD chunk scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ssd import ssd_scan
+from .ref import ssd_scan_ref
+
+__all__ = ["ssd_scan", "ssd_scan_ref", "ssd_decode_step"]
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x_t: jnp.ndarray,  # (B, H, P)
+    loga_t: jnp.ndarray,  # (B, H)
+    B_t: jnp.ndarray,  # (B, N)
+    C_t: jnp.ndarray,  # (B, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSD update (decode): the state *is* the whole cache.
+
+    One (H, P, N) read-modify-write per token — contiguous by construction,
+    the degenerate (chunk = 1) case of the facet scheme.
+    """
+    a_t = jnp.exp(loga_t.astype(jnp.float32))[:, :, None, None]
+    S = a_t * state.astype(jnp.float32) + (
+        x_t.astype(jnp.float32)[..., None] * B_t.astype(jnp.float32)[:, None, None, :]
+    )
+    y_t = jnp.einsum("bhpn,bn->bhp", S, C_t.astype(jnp.float32))
+    return y_t.astype(x_t.dtype), S

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) scan.
+
+Sequential reference recurrence, per head h with state S in R^{P x N}:
+
+    S_t = a_t * S_{t-1} + x_t (outer) B_t
+    y_t = S_t C_t
+
+where ``a_t = exp(loga_t)`` is the per-head scalar decay.  This is the exact
+(slow) semantics the chunked Pallas kernel must reproduce: the chunked form
+splits the sum into an intra-chunk term and an inter-chunk term carried by
+the chunk state — which in CFA terms is the flow-out facet of the chunk
+(thickness = the dependence depth of the recurrence, i.e. one state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # (B, T, H, P)
+    loga: jnp.ndarray,  # (B, T, H) — log decay, <= 0
+    Bmat: jnp.ndarray,  # (B, T, N) — input projection (ngroups = 1)
+    C: jnp.ndarray,  # (B, T, N) — output projection
+    init_state: jnp.ndarray | None = None,  # (B, H, P, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:  # y (B, T, H, P), final state (B, H, P, N)
+    Bb, T, H, P = x.shape
+    N = Bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    lf = loga.astype(jnp.float32)
+    Bf = Bmat.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(S, inp):
+        x_t, l_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a_t = jnp.exp(l_t)[:, :, None, None]  # (B,H,1,1)
+        S = a_t * S + x_t[..., None] * B_t[:, None, None, :]
+        y_t = jnp.einsum("bhpn,bn->bhp", S, C_t)
+        return S, y_t
+
+    inputs = (
+        xf.transpose(1, 0, 2, 3),
+        lf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2),
+        Cf.transpose(1, 0, 2),
+    )
+    S, ys = jax.lax.scan(step, s0, inputs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (B, T, H, P)
+    return y, S

@@ -1,0 +1,23 @@
+"""Jit'd public wrappers for the CFA stencil tile executor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .stencil import execute_tiles
+from .ref import execute_tiles_ref
+
+__all__ = ["execute_tiles", "execute_tiles_ref", "stencil_tile_op"]
+
+
+def stencil_tile_op(
+    program_name: str,
+    halos: jnp.ndarray,
+    tile: tuple[int, int, int],
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Execute a batch of stencil tiles; kernel path or jnp reference path."""
+    if use_kernel:
+        return execute_tiles(program_name, halos, tile, interpret=interpret)
+    return execute_tiles_ref(program_name, halos, tile)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the CFA stencil tile executor.
+
+Given a batch of halo buffers (flow-in gathered from facet arrays, low-side
+halo of width ``w`` per axis), compute the tiles' interior planes with the
+program's plane recurrence.  This is the reference the Pallas kernel is
+validated against; it is also exactly what ``CFAPipeline.execute_tile`` does,
+vectorised over a batch of tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cfa.programs import StencilProgram, get_program
+
+
+def execute_tiles_ref(
+    program: StencilProgram | str,
+    halos: jnp.ndarray,  # (B, w0+t0, w1+t1, w2+t2)
+    tile: tuple[int, int, int],
+) -> jnp.ndarray:  # (B, t0, t1, t2)
+    if isinstance(program, str):
+        program = get_program(program)
+    w = program.widths
+    t0, t1, t2 = tile
+
+    def one(H):
+        for s in range(t0):
+            prev = [H[w[0] + s - m] for m in range(w[0], 0, -1)]
+            plane = program.plane_update(prev, w)
+            H = H.at[w[0] + s, w[1] :, w[2] :].set(plane)
+        return H[w[0] :, w[1] :, w[2] :]
+
+    return jax.vmap(one)(halos)

@@ -1,0 +1,208 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+
+Proves the distribution config is coherent without real hardware: sharding
+mismatches, compile-time OOMs and unsupported collectives all surface here.
+Emits one JSON record per cell (memory analysis, cost analysis, per-kind
+collective bytes parsed from the post-SPMD HLO) that §Roofline reads.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--cell C]
+        [--mesh single|multi|both] [--out benchmarks/results/dryrun]
+"""
+# The forced device count MUST precede any other import that could touch jax
+# (jax locks the device count on first init).  Do not move these two lines.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPE_CELLS, build_cell, cell_applicable, policy_for
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from post-optimization HLO.
+
+    Two passes: (1) map every defined value name to its byte size from the
+    definition's result type; (2) for each collective op, sum the sizes of
+    its named operands.  ``-start`` variants are counted; ``-done`` are not
+    (they carry the same buffers)."""
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        ty = rhs.split(" ", 1)[0] if not rhs.startswith("(") else rhs[: rhs.index(")") + 1]
+        sizes[name] = _type_bytes(ty)
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    op_re = re.compile(
+        r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(COLLECTIVE_KINDS) + r")(?:-start)?\(([^)]*)\)"
+    )
+    for ln in lines:
+        if "-done(" in ln:
+            continue
+        m = op_re.search(ln)
+        if not m:
+            continue
+        kind, operands = m.groups()
+        total = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            if op in sizes:
+                total += sizes[op]
+        out[kind] += total
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def run_cell(arch: str, cell: str, mesh_kind: str, out_dir: Path,
+             hlo_dir: Path | None = None) -> dict:
+    cfg = get_config(arch)
+    rec = {"arch": arch, "cell": cell, "mesh": mesh_kind}
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        t0 = time.time()
+        with use_mesh(mesh, **policy_for(cfg, cell)):
+            c = build_cell(cfg, cell, mesh)
+            jitted = jax.jit(c.step, in_shardings=c.in_shardings,
+                             out_shardings=c.out_shardings)
+            lowered = jitted.lower(*c.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        coll = parse_collective_bytes(hlo)
+        try:  # loop-aware static analysis (benchmarks/hlo_analysis.py)
+            import sys
+            sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+            from benchmarks.hlo_analysis import analyze_hlo
+            st = analyze_hlo(hlo)
+            loop_aware = {
+                "flops": st.flops,
+                "collective_bytes": st.collective_bytes,
+                "collective_counts": st.collective_counts,
+                "hbm_traffic_bytes": st.hbm_traffic_bytes,
+                "while_trips": st.while_trips,
+            }
+        except Exception as e:
+            loop_aware = {"error": str(e)}
+        rec.update(
+            status="ok",
+            t_lower_s=round(t1 - t0, 2),
+            t_compile_s=round(t2 - t1, 2),
+            flops=cost.get("flops", -1.0),
+            bytes_accessed=cost.get("bytes accessed", -1.0),
+            loop_aware=loop_aware,
+            memory={
+                k: getattr(mem, k)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            collectives=coll,
+            n_devices=mesh.devices.size,
+            hlo_lines=len(hlo.splitlines()),
+        )
+        if hlo_dir is not None:
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            (hlo_dir / f"{arch}__{cell}__{mesh_kind}.hlo.txt").write_text(hlo)
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default all)")
+    ap.add_argument("--cell", default=None, choices=[*SHAPE_CELLS, None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    hlo_dir = out_dir / "hlo" if args.save_hlo else None
+
+    archs = [args.arch] if args.arch else ARCH_NAMES
+    cells = [args.cell] if args.cell else list(SHAPE_CELLS)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for cell in cells:
+            for mk in meshes:
+                path = out_dir / f"{arch}__{cell}__{mk}.json"
+                if path.exists():
+                    rec = json.loads(path.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {arch} {cell} {mk}: {rec['status']}")
+                        continue
+                rec = run_cell(arch, cell, mk, out_dir, hlo_dir)
+                path.write_text(json.dumps(rec, indent=1))
+                line = f"{arch} {cell} {mk}: {rec['status']}"
+                if rec["status"] == "ok":
+                    la_flops = rec.get("loop_aware", {}).get("flops", rec["flops"])
+                    line += (f" flops={la_flops:.3e}"
+                             f" compile={rec['t_compile_s']}s")
+                    mem = rec.get("memory", {})
+                    if "argument_size_in_bytes" in mem:
+                        gb = (mem["argument_size_in_bytes"]
+                              + mem.get("temp_size_in_bytes", 0)) / 2**30
+                        line += f" perdev_mem={gb:.2f}GiB"
+                elif rec["status"] == "error":
+                    n_fail += 1
+                    line += f" !! {rec['error'][:200]}"
+                print(line, flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

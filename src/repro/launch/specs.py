@@ -1,0 +1,234 @@
+"""Input specs and sharding trees for every (architecture x shape) cell.
+
+``input_specs`` returns weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input (the shannon/kernels pattern): shardable, no device
+allocation.  ``build_cell`` assembles everything the dry-run needs: the step
+function, abstract arguments, and in/out sharding trees.
+
+Shape cells (LM transformer shapes are seq_len x global_batch):
+
+* train_4k     — seq 4096,   batch 256 (training; lowers train_step)
+* prefill_32k  — seq 32768,  batch 32  (inference prefill)
+* decode_32k   — seq 32768,  batch 128 (one new token, KV cache of seq_len)
+* long_500k    — seq 524288, batch 1   (long-context decode; SSM/hybrid only)
+
+Modality stubs: [vlm]/[audio] context embeddings are precomputed
+(B, n_ctx, d) tensors.  Enc-dec prefill applies seq_len to the *encoder*
+(frames) and an 8x-shorter decoder prefix (DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import DP_AXES, sanitize_tree, translate_specs
+from repro.models.config import ArchConfig
+from repro.models.lm import init_caches, init_lm, spec_lm
+from repro.optim import make_optimizer, opt_state_specs
+from repro.train.steps import TrainHParams, make_decode_step, make_prefill_step, make_train_step
+
+__all__ = ["SHAPE_CELLS", "cell_applicable", "build_cell", "Cell"]
+
+SHAPE_CELLS = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, cell: str) -> tuple[bool, str]:
+    if cell == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: O(S^2) attention at 524288 requires a "
+            "sub-quadratic mechanism this model does not have (DESIGN.md skip)"
+        )
+    return True, ""
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    cell: str
+    kind: str
+    step: Any  # callable to jit
+    args: tuple  # abstract args (ShapeDtypeStruct trees)
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("pod", 1) * mesh.shape.get("data", 1))
+
+
+def _cache_specs(cache_abs, batch: int, mesh: Mesh, *, pure_dp: bool = False):
+    """Sharding specs for the (period-stacked) decode cache tree.
+
+    Batch shards over (pod, data) when divisible; otherwise (batch-1
+    long-context) the KV-cache *sequence-block* axis shards over 'data'
+    (flash-decode style).  Pure-DP archs shard sequence blocks over the
+    otherwise-idle 'model' axis instead of kv heads."""
+    batch_ok = batch % _dp_size(mesh) == 0
+
+    def rule(path, leaf):
+        name = None
+        for k in reversed(path):
+            if hasattr(k, "name"):
+                name = k.name
+                break
+            if hasattr(k, "key"):
+                name = k.key
+                break
+        bdim = DP_AXES if batch_ok else None
+        head_dim = None if pure_dp else "model"
+        if name in ("k", "v"):  # (periods, B, nb, H, bs, D)
+            nb_dim = "model" if pure_dp else (None if batch_ok else "data")
+            return P(None, bdim, nb_dim, head_dim, None, None)
+        if name == "state":  # (periods, B, H, Pd, N)
+            return P(None, bdim, head_dim, None, None)
+        if name in ("conv_x",):  # (periods, B, K-1, din)
+            return P(None, bdim, None, head_dim)
+        if name in ("conv_B", "conv_C"):
+            return P(None, bdim, None, None)
+        if name in ("cross_k", "cross_v"):  # (periods, B, S_src, H, D)
+            return P(None, bdim, None, head_dim, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abs)
+
+
+def _abstract(f, *args, **kw):
+    return jax.eval_shape(functools.partial(f, **kw), *args)
+
+
+def input_specs(cfg: ArchConfig, cell: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the cell's model inputs."""
+    info = SHAPE_CELLS[cell]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    tok = jnp.int32
+    out: dict[str, Any] = {}
+    if kind == "train":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), tok)
+        if cfg.family == "vlm":
+            out["context"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_context_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encdec:
+            out["context"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                  jnp.bfloat16)
+    elif kind == "prefill":
+        dec_seq = seq
+        if cfg.is_encdec:
+            dec_seq = max(seq // 8, 128)
+            out["context"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                  jnp.bfloat16)
+        elif cfg.family == "vlm":
+            out["context"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_context_tokens, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct((batch, dec_seq), tok)
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((batch,), tok)
+        out["position"] = jax.ShapeDtypeStruct((), tok)
+    return out
+
+
+def policy_for(cfg: ArchConfig, cell: str) -> dict:
+    """use_mesh policy per (arch, cell): pure-DP archs fold 'model' into the
+    batch axes; serving keeps activations on the training policy but the
+    caller also strips FSDP from the weights (see build_cell)."""
+    if cfg.parallelism == "dp":
+        return {"dp_axes": ("pod", "data", "model"), "drop_axes": {"model"}}
+    return {"dp_axes": DP_AXES, "drop_axes": frozenset()}
+
+
+def default_hparams(cfg: ArchConfig) -> TrainHParams:
+    """Per-arch training hyper-parameters for the production mesh: the
+    largest models micro-batch via gradient accumulation so the per-device
+    activation working set stays inside HBM (EXPERIMENTS.md §Memory)."""
+    accum = 4 if cfg.d_model >= 5120 else 1
+    return TrainHParams(accum=accum)
+
+
+def build_cell(cfg: ArchConfig, cell: str, mesh: Mesh,
+               hp: TrainHParams | None = None) -> Cell:
+    info = SHAPE_CELLS[cell]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    hp = hp or default_hparams(cfg)
+    ins = input_specs(cfg, cell)
+    pol = policy_for(cfg, cell)
+    dp = pol["dp_axes"]
+
+    params_abs = _abstract(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    pspecs = spec_lm(cfg)
+    if pol["drop_axes"]:  # pure-DP: weights lose their TP axes
+        pspecs = translate_specs(pspecs, drop=pol["drop_axes"])
+    if kind != "train":
+        # serving weights are not FSDP-sharded: per-layer parameter
+        # all-gathers have no business in a decode step (§Perf H2b)
+        pspecs = translate_specs(pspecs, drop=("data", "pod"))
+    psh = sanitize_tree(pspecs, params_abs, mesh)
+
+    if kind == "train":
+        opt_init, _ = make_optimizer(cfg.optimizer)
+        opt_abs = _abstract(opt_init, params_abs)
+        ospecs = opt_state_specs(pspecs, params_abs, cfg.optimizer)
+        osh = sanitize_tree(ospecs, opt_abs, mesh)
+        batch_abs = ins
+        bspec = {
+            "tokens": P(dp, None),
+            **({"context": P(dp, None, None)} if "context" in ins else {}),
+        }
+        bsh = sanitize_tree(bspec, batch_abs, mesh)
+        step = make_train_step(cfg, hp)
+        return Cell(cfg.name, cell, kind, step,
+                    (params_abs, opt_abs, batch_abs),
+                    (psh, osh, bsh),
+                    (psh, osh, None))
+
+    pure_dp = cfg.parallelism == "dp"
+    logits_spec = P(DP_AXES, None if pure_dp else "model")
+    if kind == "prefill":
+        step = make_prefill_step(cfg, max_seq=None)
+        args = [params_abs, ins["tokens"]]
+        shardings = [psh, sanitize_tree(P(dp, None), ins["tokens"], mesh)]
+        if "context" in ins:
+            args.append(ins["context"])
+            shardings.append(
+                sanitize_tree(P(dp, None, None), ins["context"], mesh))
+        dec_len = args[1].shape[1]
+        src_len = ins["context"].shape[1] if "context" in ins else 0
+        cache_abs = _abstract(
+            lambda: init_caches(cfg, batch, dec_len, src_len))
+        csh = sanitize_tree(_cache_specs(cache_abs, batch, mesh,
+                                         pure_dp=pure_dp), cache_abs, mesh)
+        logits_sh = sanitize_tree(
+            logits_spec,
+            jax.ShapeDtypeStruct((batch, cfg.padded_vocab), jnp.bfloat16), mesh)
+        return Cell(cfg.name, cell, kind, step, tuple(args), tuple(shardings),
+                    (logits_sh, csh))
+
+    # decode
+    src_len = 0
+    if cfg.family == "vlm":
+        src_len = cfg.n_context_tokens
+    if cfg.is_encdec:
+        src_len = cfg.n_context_tokens
+    cache_abs = _abstract(
+        lambda: init_caches(cfg, batch, seq, src_len,
+                            dtype=jnp.dtype(cfg.kv_cache_dtype)))
+    csh = sanitize_tree(_cache_specs(cache_abs, batch, mesh, pure_dp=pure_dp),
+                        cache_abs, mesh)
+    tok_sh = sanitize_tree(P(DP_AXES), ins["token"], mesh)
+    pos_sh = sanitize_tree(P(), ins["position"], mesh)
+    step = make_decode_step(cfg)
+    logits_sh = sanitize_tree(
+        logits_spec,
+        jax.ShapeDtypeStruct((batch, cfg.padded_vocab), jnp.bfloat16), mesh)
+    return Cell(cfg.name, cell, kind, step,
+                (params_abs, cache_abs, ins["token"], ins["position"]),
+                (psh, csh, tok_sh, pos_sh),
+                (logits_sh, csh))

@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 100 --batch 8 --seq 128
+
+``--smoke`` selects the reduced same-family config (CPU-runnable); without
+it the full published config is used (requires a real cluster — the mesh
+comes from ``make_production_mesh``).  The loop is fault-tolerant: rerun the
+same command after a kill and it restarts from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_production_mesh, mesh_for_devices
+from repro.train.loop import Trainer
+from repro.train.steps import TrainHParams
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.smoke:
+        mesh = None if len(jax.devices()) == 1 else mesh_for_devices()
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    hp = TrainHParams(peak_lr=args.lr, accum=args.accum,
+                      total_steps=max(args.steps, 10), warmup=min(20, args.steps))
+    trainer = Trainer(cfg, batch=args.batch, seq=args.seq,
+                      ckpt_dir=Path(args.ckpt_dir) / cfg.name, hp=hp, mesh=mesh,
+                      ckpt_every=args.ckpt_every)
+    start = trainer.step
+    log = trainer.run(args.steps)
+    for m in log:
+        print(" ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in m.items()))
+    print(f"ran {trainer.step - start} steps (resumed from {start})")
+    if args.metrics_out:
+        trainer.save_metrics(args.metrics_out)
+    trainer.data.close()
+
+
+if __name__ == "__main__":
+    main()

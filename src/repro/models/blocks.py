@@ -1,0 +1,236 @@
+"""Period blocks: assemble layer kinds into the repeating unit scanned by
+``lax.scan`` (HLO size stays O(one period) regardless of depth).
+
+Layer kinds:
+* ``attn``  — causal self-attention (+ FFN),
+* ``mamba`` — SSD mixer (+ optional FFN; none for pure-SSM LMs),
+* ``cross`` — cross-attention to a static context (VLM image layers),
+* ``dec``   — self-attention + cross-attention (enc-dec decoder layers).
+
+FFN kinds: ``mlp`` (SwiGLU), ``moe`` (top-k experts), ``none``.
+Every position is pre-norm residual.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    KVCache,
+    attention,
+    decode_attention_blocks,
+    decode_cross_attention,
+    init_attention,
+    init_mlp,
+    init_norm,
+    mlp,
+    rms_norm,
+    spec_attention,
+    spec_mlp,
+    spec_norm,
+)
+from .mamba2 import MambaCache, init_mamba, mamba_decode, mamba_train, spec_mamba
+from .moe import init_moe, moe, spec_moe
+
+__all__ = [
+    "ffn_kind",
+    "init_position",
+    "spec_position",
+    "cache_position",
+    "apply_position",
+]
+
+
+def ffn_kind(cfg: ArchConfig, pos: int) -> str:
+    if pos in cfg.moe_positions:
+        return "moe"
+    if cfg.period[pos] == "mamba" and cfg.family == "ssm":
+        return "none"
+    return "mlp"
+
+
+def init_position(key, kind: str, fk: str, cfg: ArchConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.d_model)}
+    if kind == "attn":
+        p["mixer"] = init_attention(k1, cfg)
+    elif kind == "mamba":
+        p["mixer"] = init_mamba(k1, cfg)
+    elif kind == "cross":
+        p["mixer"] = init_attention(k1, cfg)
+        p["gate"] = jnp.zeros((), jnp.float32)
+    elif kind == "dec":
+        p["mixer"] = init_attention(k1, cfg)
+        p["norm_x"] = init_norm(cfg.d_model)
+        p["cross"] = init_attention(k4, cfg)
+    else:
+        raise ValueError(kind)
+    if fk != "none":
+        p["norm2"] = init_norm(cfg.d_model)
+        p["ffn"] = init_moe(k2, cfg) if fk == "moe" else init_mlp(k3, cfg)
+    return p
+
+
+def spec_position(kind: str, fk: str, cfg: ArchConfig) -> dict:
+    from repro.distributed.sharding import P
+
+    s: dict[str, Any] = {"norm1": spec_norm()}
+    if kind == "mamba":
+        s["mixer"] = spec_mamba(cfg)
+    else:
+        s["mixer"] = spec_attention(cfg)
+    if kind == "cross":
+        s["gate"] = P()
+    if kind == "dec":
+        s["norm_x"] = spec_norm()
+        s["cross"] = spec_attention(cfg)
+    if fk != "none":
+        s["norm2"] = spec_norm()
+        s["ffn"] = spec_moe() if fk == "moe" else spec_mlp()
+    return s
+
+
+def cache_position(kind: str, cfg: ArchConfig, batch: int, seq: int, src_len: int,
+                   dtype=jnp.bfloat16):
+    """Zero-initialised decode cache slot for one period position."""
+    slot: dict[str, Any] = {}
+    if kind in ("attn", "dec"):
+        slot["kv"] = KVCache.zeros(cfg, batch, seq, dtype)
+    if kind == "mamba":
+        slot["ssm"] = MambaCache.zeros(cfg, batch, dtype)
+    if kind in ("cross", "dec"):
+        shape = (batch, src_len, cfg.stored_kv_heads, cfg.head_dim)
+        slot["cross_k"] = jnp.zeros(shape, dtype)
+        slot["cross_v"] = jnp.zeros(shape, dtype)
+    return slot
+
+
+def _cross_kv(p_attn: dict, src: jnp.ndarray, cfg: ArchConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src.astype(cd), p_attn["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", src.astype(cd), p_attn["wv"].astype(cd))
+    if cfg.qk_norm:
+        k = rms_norm(k, p_attn["k_norm"])
+    return k, v
+
+
+def apply_position(
+    p: dict,
+    x: jnp.ndarray,
+    kind: str,
+    fk: str,
+    cfg: ArchConfig,
+    mode: str,  # train | prefill | decode
+    cache: dict | None,
+    ctx: dict,
+) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
+    """Apply one period position.  Returns (x, new_cache_slot, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"])
+    new_cache: dict[str, Any] = {}
+
+    if kind == "attn":
+        if mode == "decode":
+            y, kv = decode_attention_blocks(p["mixer"], h, cache["kv"],
+                                            ctx["decode_pos"], cfg)
+            new_cache["kv"] = kv
+        else:
+            template = None
+            if mode == "prefill":
+                template = cache["kv"]
+            y, kv = attention(p["mixer"], h, cfg, positions=ctx.get("positions"),
+                              cache=template)
+            if mode == "prefill":
+                new_cache["kv"] = kv
+        x = x + y
+
+    elif kind == "mamba":
+        if mode == "decode":
+            y, ssm = mamba_decode(p["mixer"], h, cache["ssm"], cfg)
+            new_cache["ssm"] = ssm
+        else:
+            y = mamba_train(p["mixer"], h, cfg)
+            if mode == "prefill":
+                # re-run stateful tail for the cache (cheap closed form)
+                new_cache["ssm"] = _mamba_prefill_cache(
+                    p["mixer"], h, cfg, dtype=cache["ssm"].conv_x.dtype
+                )
+        x = x + y
+
+    elif kind == "cross":
+        if mode == "decode":
+            y = decode_cross_attention(p["mixer"], h, cache["cross_k"],
+                                       cache["cross_v"], cfg)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            y, _ = attention(p["mixer"], h, cfg, kv_x=ctx["cross_src"],
+                             causal=False, rope=False)
+            if mode == "prefill":
+                ck, cv = _cross_kv(p["mixer"], ctx["cross_src"], cfg)
+                new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x = x + jnp.tanh(p["gate"]).astype(y.dtype) * y
+
+    elif kind == "dec":
+        if mode == "decode":
+            y, kv = decode_attention_blocks(p["mixer"], h, cache["kv"],
+                                            ctx["decode_pos"], cfg)
+            new_cache["kv"] = kv
+            hx = rms_norm(x + y, p["norm_x"])
+            y2 = decode_cross_attention(p["cross"], hx, cache["cross_k"],
+                                        cache["cross_v"], cfg)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            template = cache["kv"] if mode == "prefill" else None
+            y, kv = attention(p["mixer"], h, cfg, positions=ctx.get("positions"),
+                              cache=template)
+            if mode == "prefill":
+                new_cache["kv"] = kv
+            hx = rms_norm(x + y, p["norm_x"])
+            y2, _ = attention(p["cross"], hx, cfg, kv_x=ctx["cross_src"],
+                              causal=False, rope=False)
+            if mode == "prefill":
+                ck, cv = _cross_kv(p["cross"], ctx["cross_src"], cfg)
+                new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x = x + y + y2
+    else:
+        raise ValueError(kind)
+
+    if fk != "none":
+        h2 = rms_norm(x, p["norm2"])
+        if fk == "moe":
+            y2, aux = moe(p["ffn"], h2, cfg)
+        else:
+            y2 = mlp(p["ffn"], h2, cfg)
+        x = x + y2
+
+    return x, (new_cache if mode != "train" else None), aux
+
+
+def _mamba_prefill_cache(p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                         dtype=jnp.bfloat16) -> MambaCache:
+    """Build the decode cache after a prefill pass (final conv tails + state)."""
+    from .mamba2 import _causal_conv, _decays, _projections, _ssd_chunked
+
+    B, S, _ = x.shape
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    xi, z, Bm, Cm, dt = _projections(p, x, cfg)
+    tails = (
+        xi[:, S - (K - 1):, :].astype(dtype),
+        Bm[:, S - (K - 1):, :].astype(dtype),
+        Cm[:, S - (K - 1):, :].astype(dtype),
+    )
+    xi = _causal_conv(xi, p["conv_x"].astype(xi.dtype))
+    Bm = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    loga, dtp = _decays(p, dt)
+    xh = xi.reshape(B, S, h, pd) * dtp[..., None].astype(xi.dtype)
+    _, S_fin = _ssd_chunked(xh, loga, Bm, Cm, cfg.ssm_chunk)
+    return MambaCache(*tails, S_fin)

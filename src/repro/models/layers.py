@@ -1,0 +1,396 @@
+"""Core model layers: norms, RoPE, GQA attention (train/prefill/decode over
+the facet-layout KV cache), SwiGLU MLP, embeddings.
+
+Functional style: every layer is an ``init_*`` returning a param dict, a
+parallel ``spec_*`` returning logical PartitionSpecs, and an ``apply``
+function.  Sharding is expressed through ``repro.distributed.sharding``:
+
+* TP (Megatron): wq/wk/wv column-parallel over 'model' (head dim), wo
+  row-parallel; w1/w3 column-, w2 row-parallel — activations between blocks
+  are constrained to batch-sharded/replicated, so GSPMD inserts exactly the
+  two all-reduces per block;
+* FSDP: the non-TP weight dim is sharded over 'data' (gathered per layer by
+  the scan);
+* attention is computed in query/key chunks (flash-style online softmax) so
+  no S x S score tensor is ever materialised — prefill_32k stays O(S.chunk).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import P, batch_spec, constrain
+from .config import ArchConfig
+
+__all__ = [
+    "rms_norm", "init_norm", "spec_norm",
+    "apply_rope",
+    "init_attention", "spec_attention", "attention",
+    "decode_attention_blocks",
+    "init_mlp", "spec_mlp", "mlp",
+    "init_embedding", "spec_embedding", "embed", "unembed",
+    "KVCache",
+]
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def spec_norm() -> dict:
+    return {"scale": P(None)}
+
+
+def rms_norm(x: jnp.ndarray, p: dict, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    """Facet(block)-layout KV cache: (B, nb, Hkv_stored, block, Dh)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+    @staticmethod
+    def zeros(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16) -> "KVCache":
+        bs = cfg.kv_block
+        nb = -(-seq // bs)
+        shape = (batch, nb, cfg.stored_kv_heads, bs, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+jax.tree_util.register_dataclass(KVCache, ["k", "v"], [])
+
+
+def init_attention(key, cfg: ArchConfig) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.padded_q_heads, cfg.stored_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    dt = jnp.dtype(cfg.param_dtype)
+    wq = _normal(ks[0], (d, hq, dh), scale, dt)
+    # zero the padded query heads: they contribute nothing, exactly
+    if cfg.padded_q_heads != cfg.n_heads:
+        mask = (np.arange(hq) < cfg.n_heads)[None, :, None]
+        wq = wq * jnp.asarray(mask, dt)
+    # kv weights are initialised per *real* kv head then replicated so the
+    # stored-kv expansion is function-preserving GQA
+    rep = cfg.stored_kv_heads // cfg.n_kv_heads
+    wk = _normal(ks[1], (d, cfg.n_kv_heads, dh), scale, dt)
+    wv = _normal(ks[2], (d, cfg.n_kv_heads, dh), scale, dt)
+    wk = jnp.repeat(wk, rep, axis=1)
+    wv = jnp.repeat(wv, rep, axis=1)
+    wo = _normal(ks[3], (hq, dh, d), (hq * dh) ** -0.5, dt)
+    if cfg.padded_q_heads != cfg.n_heads:
+        mask = (np.arange(hq) < cfg.n_heads)[:, None, None]
+        wo = wo * jnp.asarray(mask, dt)
+    p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(dh)
+        p["k_norm"] = init_norm(dh)
+    return p
+
+
+def spec_attention(cfg: ArchConfig) -> dict:
+    s = {
+        "wq": P("data", "model", None),
+        "wk": P("data", "model", None),
+        "wv": P("data", "model", None),
+        "wo": P("model", None, "data"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = spec_norm()
+        s["k_norm"] = spec_norm()
+    return s
+
+
+def _project_qkv(p, x, kv_x, cfg: ArchConfig, q_positions, kv_positions):
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x.astype(cd), p["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if q_positions is not None:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+    if kv_positions is not None:
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    q = constrain(q, batch_spec(None, "model", None))
+    k = constrain(k, batch_spec(None, "model", None))
+    v = constrain(v, batch_spec(None, "model", None))
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0):
+    """Flash-style attention in pure jnp: scan over query chunks, inner scan
+    over key chunks with online softmax.  No (S, S) tensor materialised."""
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    qpad, kpad = nq * cq - Sq, nk * ck - Sk
+    qf = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0))).astype(jnp.float32)
+    vf = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0))).astype(jnp.float32)
+    scale = Dh ** -0.5
+    kv_heads = k.shape[2]
+    g = H // kv_heads
+
+    qf = qf.reshape(B, nq, cq, kv_heads, g, Dh).transpose(1, 0, 3, 4, 2, 5)
+    kf = kf.reshape(B, nk, ck, kv_heads, Dh).transpose(1, 0, 3, 2, 4)
+    vf = vf.reshape(B, nk, ck, kv_heads, Dh).transpose(1, 0, 3, 2, 4)
+
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = k_pos < Sk
+
+    def per_q_chunk(carry, inp):
+        qc, qp = inp  # (B, kvh, g, cq, Dh), (cq,)
+
+        def per_k_chunk(state, kin):
+            m, l, acc = state
+            kc, vc, kp, kval = kin
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, kc) * scale
+            mask = kval[None, None, None, None, :]
+            if causal:
+                mask = mask & (qp[None, None, None, :, None] >= kp[None, None, None, None, :])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            pexp = jnp.exp(s - m_safe[..., None])
+            pexp = jnp.where(mask, pexp, 0.0)
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", pexp, vc)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, kv_heads, g, cq), -jnp.inf),
+            jnp.zeros((B, kv_heads, g, cq)),
+            jnp.zeros((B, kv_heads, g, cq, Dh)),
+        )
+        (m, l, acc), _ = jax.lax.scan(per_k_chunk, init, (kf, vf, k_pos, k_valid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out
+
+    _, out = jax.lax.scan(per_q_chunk, None, (qf, q_pos))
+    # (nq, B, kvh, g, cq, Dh) -> (B, Sq, H, Dh)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * cq, H, Dh)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ArchConfig,
+    *,
+    positions: jnp.ndarray | None = None,  # (S,) or (B, S)
+    kv_x: jnp.ndarray | None = None,  # cross-attention source
+    causal: bool = True,
+    rope: bool = True,
+    chunk: int = 512,
+    cache: KVCache | None = None,  # if given (with causal), emit block cache
+) -> tuple[jnp.ndarray, KVCache | None]:
+    """Self/cross attention over a full sequence (train / prefill)."""
+    B, S, d = x.shape
+    src = x if kv_x is None else kv_x
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    qpos = positions if rope else None
+    kpos = (positions if kv_x is None else None) if rope else None
+    q, k, v = _project_qkv(p, x, src, cfg, qpos, kpos)
+    out = _chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    out = constrain(out, batch_spec(None, "model", None))
+    new_cache = None
+    if cache is not None:
+        nb, bs = cache.k.shape[1], cache.k.shape[3]
+        kpad = jnp.pad(k, ((0, 0), (0, nb * bs - k.shape[1]), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (0, nb * bs - v.shape[1]), (0, 0), (0, 0)))
+        to_blocks = lambda t: t.reshape(B, nb, bs, t.shape[2], t.shape[3]).transpose(0, 1, 3, 2, 4)
+        new_cache = KVCache(
+            to_blocks(kpad).astype(cache.k.dtype), to_blocks(vpad).astype(cache.v.dtype)
+        )
+    cd = jnp.dtype(cfg.compute_dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return constrain(y, batch_spec(None, None)), new_cache
+
+
+def decode_attention_blocks(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: KVCache,
+    position: jnp.ndarray,  # int32: scalar, or (B,) per-lane positions
+    cfg: ArchConfig,
+    *,
+    rope: bool = True,
+) -> tuple[jnp.ndarray, KVCache]:
+    """One decode step over the facet(block)-layout cache.
+
+    The new token's K/V are appended with a single in-block store (CFA's
+    write-one-burst stance); attention reads the cache block-wise (jnp path;
+    ``repro.kernels.block_attention`` is the Pallas TPU path).
+
+    ``position`` may be per-lane (continuous batching): each sequence in the
+    batch writes and masks at its own offset."""
+    B, _, d = x.shape
+    pos = jnp.asarray(position, jnp.int32)
+    per_lane = pos.ndim == 1
+    qpos = (pos[:, None] if per_lane else pos[None, None]) if rope else None
+    q, k, v = _project_qkv(p, x, x, cfg, qpos, qpos)
+    bs = cache.k.shape[3]
+    blk, row = pos // bs, pos % bs
+    zero = jnp.int32(0)
+
+    if per_lane:
+        def put(blocks, new):  # vmapped per-lane in-block store
+            def one(bl, nw, b_, r_):  # bl (nb,H,bs,D); nw (H,1,D)
+                return jax.lax.dynamic_update_slice(
+                    bl, nw[None].astype(bl.dtype), (b_, zero, r_, zero))
+            return jax.vmap(one)(blocks, new[:, 0], blk, row)
+    else:
+        def put(blocks, new):  # (B, nb, H, bs, D) <- (B, 1, H, 1, D)
+            return jax.lax.dynamic_update_slice(
+                blocks, new.astype(blocks.dtype), (zero, blk, zero, row, zero)
+            )
+
+    cache = KVCache(
+        put(cache.k, k.transpose(0, 2, 1, 3)[:, None]),
+        put(cache.v, v.transpose(0, 2, 1, 3)[:, None]),
+    )
+    nb, hkv = cache.k.shape[1], cache.k.shape[2]
+    g = q.shape[2] // hkv
+    qg = q.reshape(B, hkv, g, cfg.head_dim).astype(jnp.float32)
+    kb = cache.k.astype(jnp.float32)
+    vb = cache.v.astype(jnp.float32)
+    s = jnp.einsum("bhgk,bnhsk->bhgns", qg, kb) * (cfg.head_dim ** -0.5)
+    kpos = (jnp.arange(nb)[:, None] * bs + jnp.arange(bs)[None, :])[None, None, None]
+    pos_b = pos[:, None, None, None, None] if per_lane else pos
+    s = jnp.where(kpos <= pos_b, s, -jnp.inf)
+    s = s.reshape(B, hkv, g, nb * bs)
+    w = jax.nn.softmax(s, axis=-1).reshape(B, hkv, g, nb, bs)
+    out = jnp.einsum("bhgns,bnhsk->bhgk", w, vb).reshape(B, 1, hkv * g, cfg.head_dim)
+    cd = jnp.dtype(cfg.compute_dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return constrain(y, batch_spec(None, None)), cache
+
+
+def decode_cross_attention(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, d)
+    k: jnp.ndarray,  # (B, S_src, H, Dh) precomputed source K
+    v: jnp.ndarray,
+    cfg: ArchConfig,
+) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    hkv = k.shape[2]
+    g = q.shape[2] // hkv
+    qg = q.reshape(x.shape[0], hkv, g, cfg.head_dim).astype(jnp.float32)
+    s = jnp.einsum("bhgk,bshk->bhgs", qg, k.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshk->bhgk", w, v.astype(jnp.float32))
+    out = out.reshape(x.shape[0], 1, hkv * g, cfg.head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return constrain(y, batch_spec(None, None))
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": _normal(k1, (d, f), d ** -0.5, dt),
+        "w3": _normal(k2, (d, f), d ** -0.5, dt),
+        "w2": _normal(k3, (f, d), f ** -0.5, dt),
+    }
+
+
+def spec_mlp() -> dict:
+    return {
+        "w1": P("data", "model"),
+        "w3": P("data", "model"),
+        "w2": P("model", "data"),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    h = jax.nn.silu(xc @ p["w1"].astype(cd)) * (xc @ p["w3"].astype(cd))
+    h = constrain(h, batch_spec(None, "model"))
+    y = h @ p["w2"].astype(cd)
+    return constrain(y, batch_spec(None, None))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding (vocab-parallel, padded)
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    table = _normal(k1, (vp, d), 1.0, dt)
+    head = _normal(k2, (d, vp), d ** -0.5, dt)
+    return {"table": table, "head": head}
+
+
+def spec_embedding() -> dict:
+    # table: vocab-parallel only — sharding d as well makes the gather's
+    # SPMD partitioning degenerate to full-batch all-gathers (measured in
+    # the dry-run HLO; see EXPERIMENTS.md §Perf iteration 0).
+    return {"table": P("model", None), "head": P(None, "model")}
+
+
+def embed(p: dict, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(p["table"].astype(cd), tokens, axis=0)
+    return constrain(x, batch_spec(None, None))
+
+
+def unembed(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    logits = x.astype(cd) @ p["head"].astype(cd)  # (B, S, padded_vocab)
+    return constrain(logits, batch_spec(None, "model"))

@@ -1,0 +1,241 @@
+"""Decoder-only language model (dense / MoE / SSM / hybrid / VLM) and the
+encoder-decoder variant, with scan-over-periods and the three lowerable
+entry points: train forward, prefill, decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import P, batch_spec, constrain
+from .blocks import apply_position, cache_position, ffn_kind, init_position, spec_position
+from .config import ArchConfig
+from .layers import embed, init_embedding, init_norm, rms_norm, spec_embedding, spec_norm, unembed
+
+__all__ = [
+    "init_lm", "spec_lm", "lm_forward", "lm_prefill", "lm_decode",
+    "init_caches", "init_encoder", "spec_encoder", "encode",
+]
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def _stack_specs(spec_tree: Any) -> Any:
+    """Prepend the period-stack dim (replicated) to every leaf spec."""
+    return jax.tree.map(
+        lambda s: P(None, *s), spec_tree, is_leaf=lambda s: isinstance(s, P)
+    )
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    k_embed, k_periods, k_enc = jax.random.split(key, 3)
+    period_keys = jax.random.split(k_periods, cfg.n_periods)
+
+    def one_period(k):
+        ks = jax.random.split(k, len(cfg.period))
+        return {
+            f"pos{i}": init_position(ks[i], kind, ffn_kind(cfg, i), cfg)
+            for i, kind in enumerate(cfg.period)
+        }
+
+    params = {
+        "embed": init_embedding(k_embed, cfg),
+        "periods": jax.vmap(one_period)(period_keys),
+        "final_norm": init_norm(cfg.d_model),
+    }
+    if cfg.is_encdec:
+        params["encoder"] = init_encoder(k_enc, cfg)
+    return params
+
+
+def spec_lm(cfg: ArchConfig) -> dict:
+    period_spec = {
+        f"pos{i}": spec_position(kind, ffn_kind(cfg, i), cfg)
+        for i, kind in enumerate(cfg.period)
+    }
+    s = {
+        "embed": spec_embedding(),
+        "periods": _stack_specs(period_spec),
+        "final_norm": spec_norm(),
+    }
+    if cfg.is_encdec:
+        s["encoder"] = spec_encoder(cfg)
+    return s
+
+
+def init_caches(cfg: ArchConfig, batch: int, seq: int, src_len: int = 0,
+                dtype=jnp.bfloat16) -> dict:
+    """Zero decode caches, stacked over periods (leading n_periods dim)."""
+    def one():
+        return {
+            f"pos{i}": cache_position(kind, cfg, batch, seq, src_len, dtype)
+            for i, kind in enumerate(cfg.period)
+        }
+
+    slots = one()
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_periods, *x.shape)), slots)
+
+
+# ---------------------------------------------------------------------------
+# encoder (enc-dec archs): non-causal self-attention stack over frame embeddings
+# ---------------------------------------------------------------------------
+
+def init_encoder(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, cfg.enc_layers)
+
+    def one(k):
+        return init_position(k, "attn", "mlp", cfg)
+
+    return {
+        "layers": jax.vmap(one)(keys),
+        "final_norm": init_norm(cfg.d_model),
+    }
+
+
+def spec_encoder(cfg: ArchConfig) -> dict:
+    return {
+        "layers": _stack_specs(spec_position("attn", "mlp", cfg)),
+        "final_norm": spec_norm(),
+    }
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Bidirectional encoder over (stub) frame embeddings (B, T, d)."""
+    x = constrain(frames.astype(jnp.dtype(cfg.compute_dtype)), batch_spec(None, None))
+
+    def body(x, layer_p):
+        h = rms_norm(x, layer_p["norm1"])
+        from .layers import attention
+        y, _ = attention(layer_p["mixer"], h, cfg, causal=False, rope=True)
+        x = x + y
+        h2 = rms_norm(x, layer_p["norm2"])
+        from .layers import mlp
+        x = x + mlp(layer_p["ffn"], h2, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _period_fn(cfg: ArchConfig, mode: str, *, inner_remat: bool = False):
+    def body(x, period_params, cache_slots, ctx):
+        new_slots = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.period):
+            slot = cache_slots[f"pos{i}"] if cache_slots is not None else None
+
+            def pos_fn(x, pp, i=i, kind=kind, slot=slot):
+                return apply_position(pp, x, kind, ffn_kind(cfg, i), cfg,
+                                      mode, slot, ctx)
+
+            if inner_remat and mode == "train" and len(cfg.period) > 1:
+                # nested remat: keeps only per-position boundaries live during
+                # the backward recompute of a long period body (jamba: 8
+                # unrolled layers would otherwise hold ~100 GiB of activations
+                # per device — measured, EXPERIMENTS.md §Dry-run)
+                pos_fn = jax.checkpoint(pos_fn)
+            x, new_slot, a = pos_fn(x, period_params[f"pos{i}"])
+            aux = aux + a
+            if new_slot is not None:
+                new_slots[f"pos{i}"] = new_slot
+        return x, new_slots, aux
+
+    return body
+
+
+def lm_forward(
+    params: dict,
+    tokens: jnp.ndarray,  # (B, S) int32
+    cfg: ArchConfig,
+    *,
+    cross_src: jnp.ndarray | None = None,  # (B, S_src, d) context embeddings
+    remat: bool = True,
+    remat_policy=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: logits (B, S, padded_vocab) + MoE aux loss."""
+    x = embed(params["embed"], tokens, cfg)
+    if cfg.is_encdec:
+        cross_src = encode(params["encoder"], cross_src, cfg)
+    ctx = {"positions": jnp.arange(tokens.shape[1])[None, :], "cross_src": cross_src}
+    body = _period_fn(cfg, "train", inner_remat=remat)
+
+    def scan_fn(carry, period_params):
+        x, aux = carry
+        # barrier: stops XLA hoisting the (CSE'd) f32 upcast of x out of the
+        # rematted body — without it the scan saves an f32 copy of every
+        # period boundary (2x activation-stack memory; measured on jamba)
+        x = jax.lax.optimization_barrier(x)
+        x, _, a = body(x, period_params, None, ctx)
+        return (x, aux + a), None
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn, policy=remat_policy)
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["periods"])
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(params["embed"], x, cfg)
+    return logits, aux
+
+
+def lm_prefill(
+    params: dict,
+    tokens: jnp.ndarray,  # (B, S)
+    cfg: ArchConfig,
+    *,
+    cross_src: jnp.ndarray | None = None,
+    cache_dtype=jnp.bfloat16,
+    max_seq: int | None = None,  # cache capacity (>= S + decode budget)
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill: last-position logits + filled decode caches."""
+    B, S = tokens.shape
+    src_len = 0
+    if cross_src is not None or cfg.is_encdec:
+        if cfg.is_encdec:
+            cross_src = encode(params["encoder"], cross_src, cfg)
+        src_len = cross_src.shape[1]
+    caches = init_caches(cfg, B, max_seq or S, src_len, cache_dtype)
+    x = embed(params["embed"], tokens, cfg)
+    ctx = {"positions": jnp.arange(S)[None, :], "cross_src": cross_src}
+    body = _period_fn(cfg, "prefill")
+
+    def scan_fn(x, xs):
+        period_params, slots = xs
+        x, new_slots, _ = body(x, period_params, slots, ctx)
+        return x, new_slots
+
+    x, filled = jax.lax.scan(scan_fn, x, (params["periods"], caches))
+    x = rms_norm(x[:, -1:], params["final_norm"])
+    logits = unembed(params["embed"], x, cfg)
+    return logits[:, 0], filled
+
+
+def lm_decode(
+    params: dict,
+    caches: dict,
+    token: jnp.ndarray,  # (B,) int32 — current token
+    position: jnp.ndarray,  # scalar int32 — its index in the sequence
+    cfg: ArchConfig,
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step over the facet-layout caches."""
+    x = embed(params["embed"], token[:, None], cfg)
+    ctx = {"decode_pos": position}
+    body = _period_fn(cfg, "decode")
+
+    def scan_fn(x, xs):
+        period_params, slots = xs
+        x, new_slots, _ = body(x, period_params, slots, ctx)
+        return x, new_slots
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["periods"], caches))
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(params["embed"], x, cfg)
+    return logits[:, 0], new_caches

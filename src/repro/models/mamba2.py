@@ -1,0 +1,225 @@
+"""Mamba2 (SSD) block: chunked state-space scan with facet state passing.
+
+The sequence is tiled into chunks; the inter-chunk SSM state is the chunk's
+CFA flow-out facet (dependence depth 1 along the chunk axis), carried through
+``lax.scan``.  The pure-jnp chunked path below is the XLA-compiled model
+graph (einsums -> MXU); ``repro.kernels.ssd`` is the hand-tiled Pallas TPU
+version of the same math, validated against the sequential oracle.
+
+Decode carries a constant-size cache: the SSM state plus the causal-conv
+tail — the SSM's "KV cache of seq_len" is O(1), which is exactly why the
+long_500k cell runs for SSM/hybrid archs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import P, batch_spec, constrain
+from .config import ArchConfig
+from .layers import _normal, init_norm, rms_norm, spec_norm
+
+__all__ = ["init_mamba", "spec_mamba", "mamba_train", "mamba_decode", "MambaCache"]
+
+
+@dataclasses.dataclass
+class MambaCache:
+    """Decode cache: conv tails + SSM state (the running facet)."""
+
+    conv_x: jnp.ndarray  # (B, K-1, d_inner)
+    conv_B: jnp.ndarray  # (B, K-1, N)
+    conv_C: jnp.ndarray  # (B, K-1, N)
+    state: jnp.ndarray  # (B, H, P, N) float32
+
+    @staticmethod
+    def zeros(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> "MambaCache":
+        K, din, n = cfg.ssm_conv, cfg.ssm_d_inner, cfg.ssm_state
+        h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+        return MambaCache(
+            jnp.zeros((batch, K - 1, din), dtype),
+            jnp.zeros((batch, K - 1, n), dtype),
+            jnp.zeros((batch, K - 1, n), dtype),
+            jnp.zeros((batch, h, pd, n), jnp.float32),
+        )
+
+
+jax.tree_util.register_dataclass(
+    MambaCache, ["conv_x", "conv_B", "conv_C", "state"], []
+)
+
+
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    d, din, n, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    return {
+        "w_x": _normal(ks[0], (d, din), d ** -0.5, dt),
+        "w_z": _normal(ks[1], (d, din), d ** -0.5, dt),
+        "w_B": _normal(ks[2], (d, n), d ** -0.5, dt),
+        "w_C": _normal(ks[3], (d, n), d ** -0.5, dt),
+        "w_dt": _normal(ks[4], (d, h), d ** -0.5, dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # a = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": _normal(ks[5], (K, din), K ** -0.5, dt),
+        "conv_B": _normal(ks[6], (K, n), K ** -0.5, dt),
+        "conv_C": _normal(ks[7], (K, n), K ** -0.5, dt),
+        "norm": init_norm(din),
+        "w_out": _normal(ks[8], (din, d), din ** -0.5, dt),
+    }
+
+
+def spec_mamba(cfg: ArchConfig) -> dict:
+    return {
+        "w_x": P("data", "model"),
+        "w_z": P("data", "model"),
+        "w_B": P("data", None),
+        "w_C": P("data", None),
+        "w_dt": P("data", "model"),
+        "dt_bias": P(None),
+        "A_log": P(None),
+        "D": P(None),
+        "conv_x": P(None, "model"),
+        "conv_B": P(None, None),
+        "conv_C": P(None, None),
+        "norm": spec_norm(),
+        "w_out": P("model", "data"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: jnp.ndarray | None = None):
+    """Depthwise causal conv via K shifted adds.  x: (B,S,C); w: (K,C).
+    ``tail``: (B, K-1, C) history for decode/streaming continuity."""
+    K = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = sum(xp[:, j : j + S, :] * w[j][None, None, :] for j in range(K))
+    return jax.nn.silu(out)
+
+
+def _ssd_chunked(x, loga, Bm, C, chunk: int):
+    """Chunked SSD scan (pure jnp; same math as kernels/ssd).
+
+    x: (B,T,H,P); loga: (B,T,H) f32; Bm, C: (B,T,N).  Returns y, final state.
+    """
+    Bb, T, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:  # zero-pad: loga=0 (no decay) and x=0 leave the state untouched
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    T_pad = T + pad
+    nc = T_pad // L
+    xc = x.astype(jnp.float32).reshape(Bb, nc, L, H, Pd)
+    lc = loga.astype(jnp.float32).reshape(Bb, nc, L, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bb, nc, L, N)
+    Cc = C.astype(jnp.float32).reshape(Bb, nc, L, N)
+
+    ti = jnp.arange(L)[:, None]
+    si = jnp.arange(L)[None, :]
+    mask = ti >= si
+
+    def chunk_step(S_prev, inp):
+        xk, lk, Bk, Ck = inp  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        lcum = jnp.cumsum(lk, axis=1)  # (B,L,H)
+        ltot = lcum[:, -1]  # (B,H)
+        # inter-chunk: read the incoming facet
+        cs = jnp.einsum("bln,bhpn->blhp", Ck, S_prev)
+        y_inter = jnp.exp(lcum)[..., None] * cs
+        # intra-chunk: masked decay attention
+        G = jnp.einsum("bln,bsn->bls", Ck, Bk)  # (B, L_t, L_s)
+        ldiff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B, Lt, Ls, H)
+        W = jnp.where(mask[None, :, :, None], jnp.exp(ldiff) * G[..., None], 0.0)
+        y_intra = jnp.einsum("blsh,bshp->blhp", W, xk)
+        # flow-out facet: next chunk's state
+        wout = jnp.exp(ltot[:, None] - lcum)  # (B,L,H)
+        dS = jnp.einsum("blhp,bln->bhpn", xk * wout[..., None], Bk)
+        S_new = jnp.exp(ltot)[..., None, None] * S_prev + dS
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        lc.transpose(1, 0, 2, 3),
+        Bc.transpose(1, 0, 2, 3),
+        Cc.transpose(1, 0, 2, 3),
+    )
+    S_fin, yc = jax.lax.scan(chunk_step, S0, xs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, T_pad, H, Pd)[:, :T]
+    return y.astype(x.dtype), S_fin
+
+
+def _projections(p, x, cfg: ArchConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    xi = xc @ p["w_x"].astype(cd)  # (B,S,din)
+    z = xc @ p["w_z"].astype(cd)
+    Bm = xc @ p["w_B"].astype(cd)
+    Cm = xc @ p["w_C"].astype(cd)
+    dt = xc @ p["w_dt"].astype(cd)  # (B,S,H)
+    return xi, z, Bm, Cm, dt
+
+
+def _decays(p, dt):
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    return -jnp.exp(p["A_log"])[None, None, :] * dtp, dtp
+
+
+def mamba_train(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence SSD block (training / prefill)."""
+    B, S, d = x.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xi, z, Bm, Cm, dt = _projections(p, x, cfg)
+    xi = _causal_conv(xi, p["conv_x"].astype(xi.dtype))
+    Bm = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype))
+    Cm = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype))
+    xi = constrain(xi, batch_spec(None, "model"))
+    loga, dtp = _decays(p, dt)
+    xh = (xi.reshape(B, S, h, pd) * dtp[..., None].astype(xi.dtype))
+    y, _ = _ssd_chunked(xh, loga, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, h * pd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = y.astype(cd) @ p["w_out"].astype(cd)
+    return constrain(out, batch_spec(None, None))
+
+
+def mamba_decode(
+    p: dict, x: jnp.ndarray, cache: MambaCache, cfg: ArchConfig
+) -> tuple[jnp.ndarray, MambaCache]:
+    """One-token SSD step; O(1) state update (the facet, degenerate chunk)."""
+    B, _, d = x.shape
+    h, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    xi, z, Bm, Cm, dt = _projections(p, x, cfg)
+    xi_c = _causal_conv(xi, p["conv_x"].astype(xi.dtype), tail=cache.conv_x)
+    Bm_c = _causal_conv(Bm, p["conv_B"].astype(Bm.dtype), tail=cache.conv_B)
+    Cm_c = _causal_conv(Cm, p["conv_C"].astype(Cm.dtype), tail=cache.conv_C)
+    new_cache_tails = (
+        jnp.concatenate([cache.conv_x[:, 1:], xi.astype(cache.conv_x.dtype)], axis=1),
+        jnp.concatenate([cache.conv_B[:, 1:], Bm.astype(cache.conv_B.dtype)], axis=1),
+        jnp.concatenate([cache.conv_C[:, 1:], Cm.astype(cache.conv_C.dtype)], axis=1),
+    )
+    loga, dtp = _decays(p, dt)  # (B,1,H)
+    xh = (xi_c.reshape(B, 1, h, pd) * dtp[..., None].astype(xi_c.dtype))
+    a = jnp.exp(loga[:, 0])[:, :, None, None]  # (B,H,1,1)
+    S_new = a * cache.state + jnp.einsum(
+        "bhp,bn->bhpn", xh[:, 0].astype(jnp.float32), Bm_c[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", S_new, Cm_c[:, 0].astype(jnp.float32))
+    y = y[:, None] + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, h * pd)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm"])
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = y.astype(cd) @ p["w_out"].astype(cd)
+    new_cache = MambaCache(*new_cache_tails, S_new)
+    return constrain(out, batch_spec(None, None)), new_cache

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k routing with grouped, capacity-bounded
+einsum dispatch (t5x-style), expert-parallel over the 'model' axis.
+
+CFA connection (DESIGN.md §3): the per-expert dispatch buffers
+``(groups, E, capacity, d)`` are the facet analogue for routed computation —
+tokens destined for one expert are materialised as one dense, contiguous
+block per expert (full-tile contiguity), so the all-to-all moves a few long
+extents instead of per-token scatters.  Tokens over capacity are dropped
+(standard; capacity_factor controls the trade — the paper's bounding-box
+redundancy trade-off in routing clothes).
+
+Routing groups keep the dispatch tensor linear in sequence length:
+memory = T * group_size * top_k * cf elements instead of the naive
+T^2 * k / E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import P, batch_spec, constrain
+from .config import ArchConfig
+from .layers import _normal
+
+__all__ = ["init_moe", "spec_moe", "moe"]
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.moe_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _normal(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w1": _normal(ks[1], (e, d, f), d ** -0.5, dt),
+        "w3": _normal(ks[2], (e, d, f), d ** -0.5, dt),
+        "w2": _normal(ks[3], (e, f, d), f ** -0.5, dt),
+    }
+
+
+def spec_moe() -> dict:
+    return {
+        "router": P("data", None),
+        "w1": P("model", "data", None),
+        "w3": P("model", "data", None),
+        "w2": P("model", None, "data"),
+    }
+
+
+def moe(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,S,d), load-balance aux loss (scalar))."""
+    B, S, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cd = jnp.dtype(cfg.compute_dtype)
+    T = B * S
+    gs = min(cfg.moe_group_size, T)
+    pad = (-T) % gs
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    G = xt.shape[0] // gs
+    xg = xt.reshape(G, gs, d)
+    xg = constrain(xg, batch_spec(None, None))
+    # padded tokens must not eat expert capacity
+    valid = (jnp.arange(G * gs) < T).astype(jnp.float32).reshape(G, gs)
+
+    logits = xg.astype(jnp.float32) @ p["router"]  # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)  # (G, gs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(gs * k * cfg.moe_capacity_factor / e))
+    cap = -(-cap // 4) * 4  # pad capacity for lane alignment
+
+    counts = jnp.zeros((G, 1, e), jnp.float32)
+    dispatch = None
+    combine = None
+    for j in range(k):  # k is small and static: unrolled priority assignment
+        oh = jax.nn.one_hot(top_idx[..., j], e, dtype=jnp.float32)  # (G,gs,E)
+        oh = oh * valid[..., None]
+        pos = counts + jnp.cumsum(oh, axis=1) - oh  # position if admitted
+        admitted = (pos < cap) * oh
+        counts = counts + oh.sum(axis=1, keepdims=True)
+        slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        disp_j = admitted[..., None] * slot  # (G, gs, E, C)
+        dispatch = disp_j if dispatch is None else dispatch + disp_j
+        comb_j = disp_j * top_w[..., j][..., None, None]
+        combine = comb_j if combine is None else combine + comb_j
+
+    dispatch = constrain(dispatch.astype(cd), batch_spec(None, "model", None))
+    combine = constrain(combine.astype(cd), batch_spec(None, "model", None))
+
+    # expert-facet buffers: one contiguous block per expert (EP over 'model')
+    ein = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(cd))
+    ein = constrain(ein, batch_spec("model", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, p["w1"].astype(cd)))
+    h = h * jnp.einsum("gecd,edf->gecf", ein, p["w3"].astype(cd))
+    h = constrain(h, batch_spec("model", None, None))
+    eout = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(cd))
+    eout = constrain(eout, batch_spec("model", None, None))
+    out = jnp.einsum("gsec,gecd->gsd", combine, eout)
+
+    out = out.reshape(G * gs, d)[:T].reshape(B, S, d)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return constrain(out, batch_spec(None, None)), aux

@@ -1,0 +1,170 @@
+"""Optimizers: AdamW and Adafactor (factored second moment), functional style.
+
+Optimizer state shards exactly like the parameters (ZeRO-style: the FSDP
+'data'-axis sharding of a param applies to its moments), so ``opt_state_specs``
+simply mirrors the param spec tree.  Adafactor exists because AdamW state for
+a 398B-param model (jamba-1.5-large) cannot fit a single v5e pod — see
+EXPERIMENTS.md §Memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import P
+
+__all__ = [
+    "OptState", "adamw_init", "adafactor_init", "make_optimizer",
+    "opt_state_specs", "global_norm", "clip_by_global_norm",
+]
+
+
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    mu: Any  # first moment tree (AdamW) or None-tree (Adafactor)
+    nu: Any  # second moment tree; Adafactor: dict(row=, col=) for >=2D leaves
+
+
+jax.tree_util.register_dataclass(OptState, ["step", "mu", "nu"], [])
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def _adamw_update(grads, state: OptState, params, lr, *, b1=0.9, b2=0.95,
+                  eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (no momentum, factored second moment for >=2D params)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> OptState:
+    def nu0(p):
+        if _factored(p):
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros_like(p, jnp.float32)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params),  # stub
+        nu=jax.tree.map(nu0, params),
+    )
+
+
+def _adafactor_update(grads, state: OptState, params, lr, *, decay=0.8,
+                      eps=1e-30, weight_decay=0.0, clip_threshold=1.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -decay
+
+    def upd(g, v, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            row = beta * v["row"] + (1 - beta) * g2.mean(axis=-1)
+            col = beta * v["col"] + (1 - beta) * g2.mean(axis=-2)
+            denom = jnp.maximum(row.mean(axis=-1, keepdims=True), eps)
+            rfac = jax.lax.rsqrt(row / denom)[..., None]  # (..., rows, 1)
+            cfac = jax.lax.rsqrt(col)[..., None, :]  # (..., 1, cols)
+            update = gf * rfac * cfac
+            v_new = {"row": row, "col": col}
+        else:
+            v_new = beta * v + (1 - beta) * g2
+            update = gf * jax.lax.rsqrt(v_new)
+        rms = jnp.sqrt(jnp.mean(update * update))
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), v_new
+
+    # nu has dict sub-structure for factored leaves: flatten up to param leaves
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_v = tdef.flatten_up_to(state.nu)
+    news = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_params = tdef.unflatten([n[0] for n in news])
+    nu = tdef.unflatten([n[1] for n in news])
+    return new_params, OptState(step=step, mu=state.mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(param_specs, params_shapes, optimizer: str) -> OptState:
+    """Spec tree mirroring the parameter sharding (ZeRO: moments shard like
+    their params; Adafactor factored moments drop the reduced dim's axis)."""
+    if optimizer == "adamw":
+        return OptState(step=P(), mu=param_specs, nu=param_specs)
+
+    def nu_spec(spec, shp):
+        shape = shp.shape if hasattr(shp, "shape") else shp
+        if len(shape) >= 2:
+            dims = list(spec) + [None] * (len(shape) - len(spec))
+            return {"row": P(*dims[:-1]), "col": P(*(dims[:-2] + dims[-1:]))}
+        return spec
+
+    flat_specs, tdef = jax.tree.flatten(
+        param_specs, is_leaf=lambda s: isinstance(s, P)
+    )
+    flat_shapes = jax.tree.leaves(params_shapes)
+    nu = tdef.unflatten([nu_spec(s, sh) for s, sh in zip(flat_specs, flat_shapes)])
+    mu = tdef.unflatten([P() for _ in flat_specs])
+    return OptState(step=P(), mu=mu, nu=nu)
+
+
+def make_optimizer(name: str) -> tuple[Callable, Callable]:
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params, lr))."""
+    if name == "adamw":
+        return adamw_init, _adamw_update
+    if name == "adafactor":
+        return adafactor_init, _adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

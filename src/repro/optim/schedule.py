@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``floor_frac * peak_lr``."""
+    t = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * (t + 1.0) / max(warmup, 1)  # step 0 must have lr > 0
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,122 @@
+"""Continuous batching over the facet-layout KV cache.
+
+The serving loop keeps a fixed number of *lanes* (batch slots). Each lane
+runs its own sequence at its own position — admitted whenever a lane frees
+up, retired on max-tokens/EOS — so decode steps always run at full batch
+occupancy instead of waiting for the slowest request (the task-level
+pipeline of paper Fig. 13, applied to requests).
+
+The facet(block) cache makes lane management cheap: a lane's state is a
+batch-row slice of the block arrays; admission writes one lane's prefilled
+blocks (contiguous extents), no re-packing of other lanes.
+
+Single-process reference implementation (the same step functions jit and
+shard under the production mesh; admission is host-side control flow).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.lm import init_caches, lm_decode, lm_prefill
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ArchConfig, params, *, lanes: int, max_seq: int,
+                 eos: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.lanes = lanes
+        self.max_seq = max_seq
+        self.eos = eos
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * lanes
+        self.positions = np.zeros(lanes, np.int32)  # next write index per lane
+        self.caches = init_caches(cfg, lanes, max_seq, 0)
+        self.last_tok = np.zeros(lanes, np.int32)
+
+        self._prefill1 = jax.jit(
+            lambda p, t: lm_prefill(p, t, cfg, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm_decode(p, c, t, pos, cfg))
+
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for lane in range(self.lanes):
+            if self.active[lane] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            logits, c1 = self._prefill1(self.params, jnp.asarray(req.prompt)[None])
+            # splice the single-request cache into this lane's batch row
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, lane].set(one[:, 0]),
+                self.caches, c1)
+            tok = int(jnp.argmax(logits[0, : self.cfg.vocab]))
+            req.out.append(tok)
+            self.active[lane] = req
+            self.positions[lane] = len(req.prompt)
+            self.last_tok[lane] = tok
+            self._maybe_retire(lane)
+
+    def _maybe_retire(self, lane: int) -> None:
+        req = self.active[lane]
+        if req is None:
+            return
+        if len(req.out) >= req.max_new or (
+                self.eos is not None and req.out and req.out[-1] == self.eos):
+            req.done = True
+            self.active[lane] = None
+
+    # ------------------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit, run one decode tick over all lanes, retire. Returns the
+        number of active lanes that produced a token."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.last_tok),
+            jnp.asarray(self.positions))
+        toks = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], -1),
+                          np.int32)
+        for lane in live:
+            req = self.active[lane]
+            req.out.append(int(toks[lane]))
+            self.positions[lane] += 1
+            self.last_tok[lane] = toks[lane]
+            if self.positions[lane] >= self.max_seq - 1:
+                req.done = True
+                self.active[lane] = None
+            else:
+                self._maybe_retire(lane)
+        return len(live)
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.active):
+                return
+            self.step()
+        raise RuntimeError("scheduler did not drain")

@@ -1,0 +1,9 @@
+"""Test configuration: enable f64 (oracle precision) before jax initialises.
+
+Note: device count is deliberately NOT forced here — smoke tests and benches
+must see the single real CPU device; only launch/dryrun.py sets
+``xla_force_host_platform_device_count`` (as its first statement).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

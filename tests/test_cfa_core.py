@@ -1,0 +1,232 @@
+"""Unit + property tests for the CFA core (spaces, facets, plans)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cfa import (
+    Deps,
+    IterSpace,
+    Tiling,
+    build_facet_specs,
+    cfa_plan,
+    count_runs,
+    facet_points,
+    facet_widths,
+    flow_in_points,
+    flow_out_points,
+    get_program,
+    interior_tile,
+    original_layout_plan,
+    bounding_box_plan,
+    data_tiling_plan,
+)
+from repro.core.cfa.plans import _assign_hosts
+
+
+# ---------------------------------------------------------------------------
+# widths / basic sets
+# ---------------------------------------------------------------------------
+
+def test_facet_widths_table1():
+    assert facet_widths(get_program("jacobi2d5p").deps) == (1, 2, 2)
+    assert facet_widths(get_program("jacobi2d9p").deps) == (1, 2, 2)
+    assert facet_widths(get_program("gaussian").deps) == (1, 4, 4)
+    assert facet_widths(get_program("smith-waterman-3seq").deps) == (3, 1, 1)
+
+
+def test_deps_reject_forward_vectors():
+    with pytest.raises(ValueError):
+        Deps(((1, 0),))
+    with pytest.raises(ValueError):
+        Deps(((0, 0),))
+
+
+def test_flow_sets_simple_1d():
+    space, deps, tiling = IterSpace((8,)), Deps(((-1,),)), Tiling((4,))
+    fin = flow_in_points(space, deps, tiling, (1,))
+    assert fin.tolist() == [[3]]
+    fout = flow_out_points(space, deps, tiling, (0,))
+    assert fout.tolist() == [[3]]
+    # last tile has no consumers
+    assert flow_out_points(space, deps, tiling, (1,)).size == 0
+
+
+# ---------------------------------------------------------------------------
+# the paper's layout family (example of §IV, Fig. 5: t=5, w=(1,2,2))
+# ---------------------------------------------------------------------------
+
+def test_paper_example_layout():
+    space = IterSpace((25, 25, 25))
+    deps = Deps(((-1, 0, 0), (0, -1, -2), (0, -2, -1)))  # w = (1, 2, 2)
+    tiling = Tiling((5, 5, 5))
+    specs = build_facet_specs(space, deps, tiling)
+    assert facet_widths(deps) == (1, 2, 2)
+    # facet_j[jj][ii][kk][k][i][j%2] (paper §IV-H/I)
+    assert specs[1].outer_axes == (1, 0, 2)
+    assert specs[1].inner_axes == (2, 0, 1)
+    assert specs[1].shape == (5, 5, 5, 5, 5, 2)
+    # facet_k[kk][jj][ii][i][j][k%2]
+    assert specs[2].outer_axes == (2, 1, 0)
+    assert specs[2].inner_axes == (0, 1, 2)
+    assert specs[2].shape == (5, 5, 5, 5, 5, 2)
+    # facet_i: single-assignment axis first, extension axis j last outer
+    assert specs[0].outer_axes == (0, 2, 1)
+    assert specs[0].inner_axes == (1, 2, 0)
+    assert specs[0].shape == (5, 5, 5, 5, 5, 1)
+
+
+def test_full_tile_contiguity_every_facet_single_run():
+    """§IV-G: each tile's facet block is one contiguous burst."""
+    prog = get_program("jacobi2d5p")
+    space, tiling = IterSpace((48, 48, 48)), Tiling((16, 16, 16))
+    specs = build_facet_specs(space, prog.deps, tiling)
+    w = facet_widths(prog.deps)
+    for tile in [(0, 0, 0), (1, 1, 1), (2, 0, 1)]:
+        for k, spec in specs.items():
+            pts = facet_points(tiling, w, k, tile)
+            runs = count_runs(spec.offsets(pts))
+            assert len(runs) == 1
+            assert runs[0] == spec.block_elems
+
+
+# ---------------------------------------------------------------------------
+# coverage property (the appendix proof, tested exhaustively on small spaces)
+# ---------------------------------------------------------------------------
+
+dep_component = st.integers(min_value=-2, max_value=0)
+
+
+@st.composite
+def dep_patterns(draw, d):
+    n = draw(st.integers(min_value=1, max_value=4))
+    vecs = []
+    for _ in range(n):
+        v = tuple(draw(dep_component) for _ in range(d))
+        vecs.append(v)
+    if all(all(c == 0 for c in v) for v in vecs):
+        vecs[0] = tuple(-1 for _ in range(d))
+    return Deps(tuple(vecs))
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_flow_in_contained_in_facets(data):
+    """Appendix B: every flow-in point of T lies in a facet of its own tile."""
+    d = data.draw(st.integers(min_value=1, max_value=3), label="d")
+    deps = data.draw(dep_patterns(d), label="deps")
+    w = facet_widths(deps)
+    tiles = tuple(
+        data.draw(st.integers(min_value=max(1, w[a]), max_value=4), label=f"t{a}")
+        for a in range(d)
+    )
+    nt = tuple(data.draw(st.integers(min_value=1, max_value=3), label=f"n{a}") for a in range(d))
+    space = IterSpace(tuple(t * n for t, n in zip(tiles, nt)))
+    tiling = Tiling(tiles)
+    specs = build_facet_specs(space, deps, tiling)
+    tile = tuple(min(1, n - 1) for n in nt)
+    fin = flow_in_points(space, deps, tiling, tile)
+    for y in fin:
+        assert any(spec.domain_mask(y[None, :])[0] for spec in specs.values()), (
+            f"flow-in point {y} not covered by any facet (deps={deps.vectors})"
+        )
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_host_assignment_total_and_valid(data):
+    d = 3
+    deps = data.draw(dep_patterns(d), label="deps")
+    w = facet_widths(deps)
+    tiles = tuple(max(2, wa + 1) for wa in w)
+    space = IterSpace(tuple(t * 3 for t in tiles))
+    tiling = Tiling(tiles)
+    specs = build_facet_specs(space, deps, tiling)
+    tile = (1, 1, 1)
+    fin = flow_in_points(space, deps, tiling, tile)
+    hosts = _assign_hosts(fin, tile, tiling, w, specs)
+    assigned = sum(len(v) for v in hosts.values())
+    assert assigned == len(fin)
+    for k, idx in hosts.items():
+        if idx.size:
+            assert bool(specs[k].domain_mask(fin[idx]).all())
+
+
+# ---------------------------------------------------------------------------
+# facet address maps are injective per facet (single-assignment, §IV-F4)
+# ---------------------------------------------------------------------------
+
+def test_single_assignment_no_offset_collisions():
+    prog = get_program("smith-waterman-3seq")
+    space, tiling = IterSpace((12, 12, 12)), Tiling((6, 6, 6))
+    specs = build_facet_specs(space, prog.deps, tiling)
+    w = facet_widths(prog.deps)
+    for k, spec in specs.items():
+        all_offsets = []
+        for q0 in range(2):
+            for q1 in range(2):
+                for q2 in range(2):
+                    pts = facet_points(tiling, w, k, (q0, q1, q2))
+                    all_offsets.append(spec.offsets(pts))
+        flat = np.concatenate(all_offsets)
+        assert len(np.unique(flat)) == len(flat), f"facet_{k} offsets collide"
+        assert flat.min() >= 0 and flat.max() < spec.size
+
+
+# ---------------------------------------------------------------------------
+# the paper's burst counts: 4 reads + one write per facet for 3-D tiles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["jacobi2d5p", "jacobi2d9p", "gaussian",
+                                  "smith-waterman-3seq"])
+def test_cfa_four_read_bursts(name):
+    prog = get_program(name)
+    t = prog.default_tile
+    space = IterSpace(tuple(4 * x for x in t))
+    tiling = Tiling(t)
+    plan = cfa_plan(space, prog.deps, tiling)
+    assert plan.n_read_bursts == 4, f"{name}: {plan.read_runs}"
+    assert plan.n_write_bursts == len(build_facet_specs(space, prog.deps, tiling))
+    assert plan.redundancy < 0.25
+
+
+@pytest.mark.parametrize("name", ["jacobi2d5p", "smith-waterman-3seq"])
+def test_cfa_exact_reads_zero_redundancy(name):
+    prog = get_program(name)
+    t = prog.default_tile
+    space = IterSpace(tuple(4 * x for x in t))
+    plan = cfa_plan(space, prog.deps, Tiling(t), boxed=False)
+    assert plan.read_transferred == plan.read_useful
+
+
+def test_cfa_beats_baselines_on_burst_count():
+    prog = get_program("jacobi2d5p")
+    space, tiling = IterSpace((64, 64, 64)), Tiling((16, 16, 16))
+    tile = interior_tile(space, tiling)
+    cfa = cfa_plan(space, prog.deps, tiling, tile)
+    orig = original_layout_plan(space, prog.deps, tiling, tile)
+    bbox = bounding_box_plan(space, prog.deps, tiling, tile)
+    dt = data_tiling_plan(space, prog.deps, tiling, tile)
+    assert cfa.n_bursts < orig.n_bursts
+    assert cfa.n_bursts <= bbox.n_bursts or cfa.redundancy < bbox.redundancy
+    # original layout never transfers redundant data; bbox/data-tiling do
+    assert orig.redundancy == 0.0
+    assert bbox.redundancy > 0.0
+    assert dt.redundancy > 0.0
+    # CFA moves (nearly) only useful data
+    assert cfa.redundancy < bbox.redundancy
+    assert cfa.redundancy < dt.redundancy
+
+
+def test_all_flow_out_covered_by_facet_writes():
+    """CFA writes full facets; flow-out must be a subset (appendix proof)."""
+    prog = get_program("jacobi2d9p")
+    space, tiling = IterSpace((48, 48, 48)), Tiling((16, 16, 16))
+    w = facet_widths(prog.deps)
+    specs = build_facet_specs(space, prog.deps, tiling)
+    tile = (1, 1, 1)
+    fout = flow_out_points(space, prog.deps, tiling, tile)
+    facet_sets = [
+        set(map(tuple, facet_points(tiling, w, k, tile))) for k in specs
+    ]
+    for x in map(tuple, fout):
+        assert any(x in s for s in facet_sets)

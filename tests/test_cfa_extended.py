@@ -1,0 +1,196 @@
+"""Extended CFA coverage: 1-D/2-D/4-D spaces, §J (non-mergeable k-th-level
+neighbours), bandwidth model properties, and analyzer sanity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cfa import (
+    AXI_ZC706,
+    BandwidthReport,
+    Deps,
+    IterSpace,
+    Tiling,
+    build_facet_specs,
+    cfa_plan,
+    count_runs,
+    facet_widths,
+    flow_in_points,
+    original_layout_plan,
+)
+
+
+def test_1d_cfa_single_burst():
+    space, deps, tiling = IterSpace((32,)), Deps(((-2,),)), Tiling((8,))
+    plan = cfa_plan(space, deps, tiling, (2,))
+    assert plan.n_read_bursts == 1
+    assert plan.n_write_bursts == 1
+    assert plan.read_useful == 2  # w = 2
+
+
+def test_2d_cfa_two_read_bursts():
+    """d=2: corner merges into the extension read -> 2 bursts total."""
+    space = IterSpace((32, 32))
+    deps = Deps(((-1, 0), (0, -1), (-1, -1)))
+    tiling = Tiling((8, 8))
+    plan = cfa_plan(space, deps, tiling, (1, 1))
+    assert plan.n_read_bursts == 2, plan.read_runs
+    assert plan.n_write_bursts == 2
+
+
+def test_4d_cfa_counts_extra_bursts_not_crash():
+    """Paper §J: in d >= 4 some k-th-level neighbours cannot merge; the
+    planner must still cover every flow-in point, with a few more bursts."""
+    space = IterSpace((8, 8, 8, 8))
+    deps = Deps(((-1, -1, -1, -1), (-1, 0, 0, 0), (0, 0, -1, -1)))
+    tiling = Tiling((4, 4, 4, 4))
+    plan = cfa_plan(space, deps, tiling, (1, 1, 1, 1))
+    assert plan.n_write_bursts == 4  # one per facet
+    assert 4 <= plan.n_read_bursts <= 16  # d reads + non-mergeable corners
+    orig = original_layout_plan(space, deps, tiling, (1, 1, 1, 1))
+    assert plan.n_read_bursts < orig.n_read_bursts
+
+
+def test_bandwidth_monotonic_in_burst_length():
+    """Same bytes in fewer/longer bursts is never slower."""
+    short = AXI_ZC706.time_s(tuple([16] * 64))
+    long_ = AXI_ZC706.time_s((1024,))
+    assert long_ < short
+
+
+@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_bandwidth_report_bounded_by_peak(runs):
+    from repro.core.cfa.plans import TransferPlan
+
+    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
+    rep = BandwidthReport.evaluate(plan, AXI_ZC706)
+    assert 0 < rep.peak_fraction_raw <= 1.0
+    assert rep.peak_fraction_effective <= rep.peak_fraction_raw + 1e-12
+
+
+def test_count_runs_exact():
+    assert count_runs(np.array([5, 6, 7, 10, 11, 20])) == (3, 2, 1)
+    assert count_runs(np.array([], dtype=np.int64)) == ()
+    assert count_runs(np.array([3, 3, 4])) == (2,)  # dedup
+
+
+@given(
+    w=st.integers(1, 3),
+    t=st.integers(3, 6),
+)
+@settings(max_examples=20, deadline=None)
+def test_write_always_single_burst_per_facet(w, t):
+    """The paper's stance: ALL writes are bursts — any dep pattern, any tile."""
+    if w > t:
+        return
+    deps = Deps(((-w, 0, 0), (0, -w, 0), (0, 0, -w)))
+    space = IterSpace((3 * t, 3 * t, 3 * t))
+    tiling = Tiling((t, t, t))
+    plan = cfa_plan(space, deps, tiling, (1, 1, 1))
+    assert plan.n_write_bursts == 3
+    assert all(r > 0 for r in plan.write_runs)
+
+
+def test_flow_in_boundary_tiles_partial_facets():
+    """Boundary tiles have truncated flow-in; plans must not crash or
+    over-read outside the space."""
+    from repro.core.cfa import get_program
+
+    prog = get_program("jacobi2d5p")
+    space, tiling = IterSpace((8, 8, 8)), Tiling((4, 4, 4))
+    for tile in [(0, 0, 0), (0, 1, 1), (1, 0, 1)]:
+        plan = cfa_plan(space, prog.deps, tiling, tile)
+        fin = flow_in_points(space, prog.deps, tiling, tile)
+        assert plan.read_useful == len(fin)
+
+
+def test_hlo_analyzer_on_synthetic_module():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    hlo = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %d = f32[8,128] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128] all-reduce(%d), replica_groups={}
+  ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %a)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,128] get-tuple-element(%w), index=1
+}
+"""
+    s = analyze_hlo(hlo)
+    # 12 trips x one AR of 8*128*4 bytes
+    assert s.collective_bytes["all-reduce"] == 12 * 8 * 128 * 4
+    assert s.collective_counts["all-reduce"] == 12
+    assert s.while_trips.get("body.1") == 12
+
+
+# ---------------------------------------------------------------------------
+# wavefront-parallel sweep + multi-port distribution (paper §VII future work)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,space,tile,kernel", [
+    ("jacobi2d5p", (8, 8, 8), (4, 4, 4), False),
+    ("jacobi2d5p", (8, 8, 8), (4, 4, 4), True),
+    ("smith-waterman-3seq", (6, 8, 8), (3, 4, 4), False),
+])
+def test_wavefront_sweep_matches_sequential(name, space, tile, kernel):
+    import jax.numpy as jnp
+    from repro.core.cfa import CFAPipeline, get_program
+
+    prog = get_program(name)
+    pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
+    rng = np.random.default_rng(0)
+    inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])),
+                         jnp.float32)
+    seq = pipe.sweep(inputs)
+    wav = pipe.sweep_wavefront(inputs, use_kernel=kernel)
+    for k in pipe.specs:
+        np.testing.assert_allclose(np.asarray(seq[k]), np.asarray(wav[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_wavefront_independence():
+    """Tiles in one wave must not depend on each other."""
+    from repro.core.cfa import CFAPipeline, get_program
+
+    prog = get_program("jacobi2d9p")
+    pipe = CFAPipeline(prog, IterSpace((12, 12, 12)), Tiling((4, 4, 4)))
+    for wave in pipe.wavefronts():
+        sums = {sum(t) for t in wave}
+        assert len(sums) == 1
+    total = sum(len(w) for w in pipe.wavefronts())
+    assert total == 27
+
+
+def test_multiport_balance_and_speedup():
+    from repro.core.cfa import AXI_ZC706, get_program
+    from repro.core.cfa.multiport import assign_ports, port_speedup
+
+    prog = get_program("jacobi2d5p")
+    space, tiling = IterSpace((64, 64, 64)), Tiling((16, 16, 16))
+    pa = assign_ports(space, prog.deps, tiling, 3)
+    assert set(pa.facet_to_port) == {0, 1, 2}  # every facet assigned
+    assert pa.balance < 2.0
+    r1 = port_speedup(space, prog.deps, tiling, 1, AXI_ZC706)
+    r3 = port_speedup(space, prog.deps, tiling, 3, AXI_ZC706)
+    assert r1["speedup"] == pytest.approx(1.0, abs=1e-9)
+    assert r3["speedup"] > 1.5  # three facets -> near-3x at balance ~1

@@ -1,0 +1,87 @@
+"""Elastic fault tolerance: checkpoints restore across mesh changes, and the
+data pipeline survives stragglers."""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.data.pipeline import SyntheticTokens
+
+REPO = Path(__file__).resolve().parents[1]
+
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, jax, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import sanitize_tree
+    from repro.models.lm import init_lm, spec_lm
+
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), n_layers=2)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    pspec = spec_lm(cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        # save while sharded on a 4x2 mesh
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+        sh_a = sanitize_tree(pspec, params, mesh_a)
+        params_a = jax.device_put(params, sh_a)
+        m = CheckpointManager(d)
+        m.save(7, params_a, blocking=True)
+
+        # restore onto a 2x4 mesh (different pod shape after elastic event)
+        mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+        sh_b = sanitize_tree(pspec, params, mesh_b)
+        restored = m.restore(7, params, shardings=sh_b)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and the restored tree really lives on mesh_b
+        leaf = jax.tree.leaves(restored)[0]
+        assert leaf.sharding.mesh.shape == {"data": 2, "model": 4}
+    print("ELASTIC_OK")
+""")
+
+
+def test_checkpoint_elastic_resharding_subprocess():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    res = subprocess.run([sys.executable, "-c", _ELASTIC_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert "ELASTIC_OK" in res.stdout, res.stderr[-3000:]
+
+
+class _Slow(SyntheticTokens):
+    """Every 3rd batch takes far longer than the step deadline."""
+
+    def batch_at(self, step):
+        if step % 3 == 2:
+            time.sleep(0.5)
+        return super().batch_at(step)
+
+
+def test_straggler_deadline_skips_not_stalls():
+    d = _Slow(vocab=64, batch=2, seq=8, prefetch=1)
+    t0 = time.time()
+    batches = [d.next(deadline_s=0.2) for _ in range(6)]
+    dt = time.time() - t0
+    d.close()
+    assert all(b["tokens"].shape == (2, 8) for b in batches)
+    # without mitigation: >= 2 stalls x 0.5 s on the critical path; with the
+    # deadline fallback the six steps finish quickly and skips are counted
+    assert dt < 2.5
+    assert d.stats["skipped"] >= 1
+
+
+def test_data_determinism_across_seek():
+    a = SyntheticTokens(vocab=100, batch=2, seq=8, seed=5)
+    first = [a.next() for _ in range(4)]
+    a.seek(0)
+    second = [a.next() for _ in range(4)]
+    a.close()
+    for x, y in zip(first, second):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])

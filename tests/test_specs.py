@@ -1,0 +1,91 @@
+"""Cell/spec construction: input_specs shapes, applicability rules, and a
+full lower+compile of one smoke cell on a forced-device mesh (subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.specs import SHAPE_CELLS, cell_applicable, input_specs
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("cell", list(SHAPE_CELLS))
+def test_input_specs_shapes(arch, cell):
+    cfg = get_config(arch)
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        assert cell == "long_500k" and not cfg.supports_long_context
+        assert why
+        return
+    ins = input_specs(cfg, cell)
+    info = SHAPE_CELLS[cell]
+    if info["kind"] == "train":
+        assert ins["tokens"].shape == (info["batch"], info["seq"])
+        if cfg.family in ("vlm", "encdec"):
+            assert "context" in ins
+            assert ins["context"].shape[0] == info["batch"]
+            assert ins["context"].shape[2] == cfg.d_model
+    elif info["kind"] == "prefill":
+        assert ins["tokens"].shape[0] == info["batch"]
+        if cfg.is_encdec:
+            assert ins["context"].shape[1] == info["seq"]  # frames carry seq
+            assert ins["tokens"].shape[1] == max(info["seq"] // 8, 128)
+        else:
+            assert ins["tokens"].shape[1] == info["seq"]
+    else:
+        assert ins["token"].shape == (info["batch"],)
+        assert ins["position"].shape == ()
+
+
+def test_long_500k_applicability_matches_design():
+    eligible = {a for a in ARCH_NAMES if cell_applicable(get_config(a), "long_500k")[0]}
+    assert eligible == {"mamba2-370m", "jamba-1.5-large-398b"}
+
+
+def test_every_cell_count_is_40():
+    cells = 0
+    for a in ARCH_NAMES:
+        for c in SHAPE_CELLS:
+            cells += 1
+    assert cells == 40
+
+
+_CELL_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, jax
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import use_mesh
+    from repro.launch.specs import build_cell, policy_for, SHAPE_CELLS
+    import repro.launch.specs as S
+
+    # shrink the cells so smoke configs lower quickly
+    S.SHAPE_CELLS = {
+        "train_4k": dict(seq=64, batch=8, kind="train"),
+        "decode_32k": dict(seq=64, batch=8, kind="decode"),
+    }
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for arch in ("qwen3-0.6b", "jamba-1.5-large-398b"):
+        cfg = get_smoke_config(arch)
+        for cell in ("train_4k", "decode_32k"):
+            with use_mesh(mesh, **policy_for(cfg, cell)):
+                c = build_cell(cfg, cell, mesh)
+                jax.jit(c.step, in_shardings=c.in_shardings,
+                        out_shardings=c.out_shardings).lower(*c.args).compile()
+            print(f"CELL_OK {arch} {cell}")
+""")
+
+
+def test_build_cell_compiles_on_small_mesh_subprocess():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    res = subprocess.run([sys.executable, "-c", _CELL_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert res.stdout.count("CELL_OK") == 4, (
+        f"stdout={res.stdout}\nstderr={res.stderr[-3000:]}")

@@ -1,0 +1,141 @@
+"""Training loop: convergence, checkpoint/restart, preemption, optimizers."""
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.pipeline import PackedDocs, SyntheticTokens
+from repro.models.lm import init_lm
+from repro.optim import (adamw_init, adafactor_init, cosine_warmup,
+                         clip_by_global_norm, make_optimizer)
+from repro.train.loop import Trainer
+from repro.train.steps import TrainHParams
+
+
+def test_loss_decreases_on_learnable_data(tmp_path):
+    """Train on a tiny fixed dataset the model can memorise."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), n_layers=2)
+
+    class Fixed(SyntheticTokens):
+        def batch_at(self, step):
+            rng = np.random.default_rng(42)  # same batch every step
+            return {"tokens": rng.integers(0, self.vocab,
+                                           size=(self.batch, self.seq),
+                                           dtype=np.int32)}
+
+    hp = TrainHParams(peak_lr=1e-2, warmup=2, total_steps=40, remat=False)
+    tr = Trainer(cfg, batch=4, seq=32, ckpt_dir=tmp_path, hp=hp,
+                 data=Fixed(vocab=cfg.vocab, batch=4, seq=32), ckpt_every=1000)
+    log = tr.run(30, log_every=1)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    assert last < first * 0.7, (first, last)
+    tr.data.close()
+
+
+def test_checkpoint_restart_resumes_identically(tmp_path):
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), n_layers=2)
+    hp = TrainHParams(remat=False, warmup=2, total_steps=50)
+
+    tr1 = Trainer(cfg, batch=2, seq=16, ckpt_dir=tmp_path / "a", hp=hp,
+                  ckpt_every=5, seed=3)
+    tr1.run(10, log_every=1)
+    loss_uninterrupted = tr1.metrics_log[-1]["loss"]
+    tr1.data.close()
+
+    # same run, killed after 5 steps then restarted
+    tr2 = Trainer(cfg, batch=2, seq=16, ckpt_dir=tmp_path / "b", hp=hp,
+                  ckpt_every=5, seed=3)
+    tr2.run(5, log_every=1)
+    tr2.ckpt.wait()
+    tr2.data.close()
+    tr3 = Trainer(cfg, batch=2, seq=16, ckpt_dir=tmp_path / "b", hp=hp,
+                  ckpt_every=5, seed=3)
+    assert tr3.step == 5  # restored
+    tr3.run(5, log_every=1)
+    loss_resumed = tr3.metrics_log[-1]["loss"]
+    np.testing.assert_allclose(loss_resumed, loss_uninterrupted, rtol=1e-5)
+    tr3.data.close()
+
+
+def test_preemption_checkpoint(tmp_path):
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), n_layers=2)
+    hp = TrainHParams(remat=False)
+    tr = Trainer(cfg, batch=2, seq=16, ckpt_dir=tmp_path, hp=hp,
+                 ckpt_every=1000, seed=1)
+    (tr.ckpt.dir / "PREEMPT").write_text("")
+    tr.run(10, log_every=1)
+    assert tr.step == 1  # stopped after the first step
+    assert tr.ckpt.latest_step() == 1  # and checkpointed before exiting
+    tr.data.close()
+
+
+def test_checkpoint_keep_last_k(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    m = CheckpointManager(tmp_path, keep=2)
+    tree = {"a": jnp.arange(4.0)}
+    for s in (1, 2, 3, 4):
+        m.save(s, tree, blocking=True)
+    assert m.all_steps() == [3, 4]
+
+
+def test_checkpoint_restore_rejects_wrong_tree(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    m = CheckpointManager(tmp_path)
+    m.save(1, {"a": jnp.arange(4.0)}, blocking=True)
+    with pytest.raises(ValueError):
+        m.restore(1, {"a": jnp.arange(4.0), "b": jnp.zeros(2)})
+
+
+def test_grad_accumulation_equivalence():
+    """accum=2 == accum=1 on the same global batch (up to f32 tolerance)."""
+    cfg = dataclasses.replace(get_smoke_config("qwen3-0.6b"), n_layers=2,
+                              compute_dtype="float32")
+    from repro.train.steps import make_train_step
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    outs = {}
+    for accum in (1, 2):
+        hp = TrainHParams(remat=False, accum=accum, warmup=1)
+        p, o, m = make_train_step(cfg, hp)(params, opt_init(params), batch)
+        outs[accum] = (p, m["loss"])
+    np.testing.assert_allclose(float(outs[1][1]), float(outs[2][1]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[2][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_adafactor_memory_is_sublinear():
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    adam = adamw_init(params)
+    fact = adafactor_init(params)
+    size = lambda t: sum(int(np.prod(l.shape)) for l in jax.tree.leaves(t))
+    assert size(fact.nu) + size(fact.mu) < 0.25 * (size(adam.mu) + size(adam.nu))
+
+
+def test_schedule_and_clip():
+    lr0 = cosine_warmup(0, peak_lr=1.0, warmup=10, total=100)
+    lr10 = cosine_warmup(10, peak_lr=1.0, warmup=10, total=100)
+    lr100 = cosine_warmup(100, peak_lr=1.0, warmup=10, total=100)
+    assert float(lr0) == pytest.approx(0.1)  # step 0 trains (lr > 0)
+    assert float(lr10) == 1.0
+    assert 0.09 < float(lr100) < 0.11  # floor = 0.1 * peak
+    g = {"w": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["w"])) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_packed_docs_have_eos_and_full_rows():
+    d = PackedDocs(vocab=100, batch=2, seq=64, mean_doc_len=10)
+    b = d.next()
+    assert b["tokens"].shape == (2, 64)
+    assert (b["tokens"] == 0).any(axis=1).all()  # every row has an EOS
+    d.close()
