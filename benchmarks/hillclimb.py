@@ -1,156 +1,109 @@
-"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+"""Layout hillclimbing CLI — a thin front-end over ``repro.core.cfa.autotune``.
 
-Lowers + compiles variants of the three chosen cells on the single-pod mesh,
-re-derives the roofline terms from the HLO, and writes one JSON per variant
-to benchmarks/results/perf/.  Each variant is a (hypothesis, change) pair —
-the log in EXPERIMENTS.md quotes these numbers directly.
+The search itself (candidate tilings x extension directions x contiguity
+levels, scored by the BurstModel, persistently cached) lives in the library;
+this script only parses arguments, runs decisions, prints the ranked tables
+and writes one JSON per (program, model) to benchmarks/results/autotune/.
 
-    PYTHONPATH=src python benchmarks/hillclimb.py [--only NAME]
+    PYTHONPATH=src python benchmarks/hillclimb.py                     # whole suite
+    PYTHONPATH=src python benchmarks/hillclimb.py --program jacobi2d5p \
+        --space 64 64 64 --model tpu-v5e-hbm --budget 128 --seed 3
+    PYTHONPATH=src python benchmarks/hillclimb.py --no-cache --top 12
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
-import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
+from repro.core.cfa import (
+    AXI_ZC706,
+    TPU_V5E_HBM,
+    IterSpace,
+    PROGRAMS,
+    autotune,
+    get_program,
+    hand_coded_baselines,
+)
 
-from benchmarks.hlo_analysis import analyze_hlo
-from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
-                                 analytic_bytes_per_device,
-                                 model_flops_per_device)
-from repro.configs import get_config
-from repro.distributed.sharding import use_mesh
-from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import build_cell, policy_for
-from repro.train.steps import TrainHParams
-
-OUT = Path(__file__).parent / "results" / "perf"
+OUT = Path(__file__).parent / "results" / "autotune"
+MODELS = {m.name: m for m in (AXI_ZC706, TPU_V5E_HBM)}
 
 
-def measure(tag: str, arch: str, cell: str, cfg, hp=None) -> dict:
-    mesh = make_production_mesh(multi_pod=False)
-    t0 = time.time()
-    with use_mesh(mesh, **policy_for(cfg, cell)):
-        c = build_cell(cfg, cell, mesh, hp=hp)
-        jitted = jax.jit(c.step, in_shardings=c.in_shardings,
-                         out_shardings=c.out_shardings)
-        lowered = jitted.lower(*c.args)
-    compiled = lowered.compile()
-    stats = analyze_hlo(compiled.as_text())
-    mem = compiled.memory_analysis()
-    nd = mesh.devices.size
-    coll = sum(stats.collective_bytes.values())
-    hbm_lb = analytic_bytes_per_device(cfg, cell, nd)
-    terms = {
-        "compute": stats.flops / PEAK_FLOPS,
-        "memory": hbm_lb / HBM_BW,
-        "collective": coll / ICI_BW,
+def run_one(name: str, space: tuple[int, ...], model, args) -> dict:
+    prog = get_program(name)
+    decision = autotune(
+        prog,
+        space,
+        model,
+        seed=args.seed,
+        budget=args.budget,
+        cache=not args.no_cache,
+        cache_dir=args.cache_dir,
+    )
+    print(decision.summary(top=args.top))
+    # compare against the hand-coded plans at the default tile when it is
+    # legal for this space, else at the winning tile
+    base_tile = prog.default_tile
+    if any(n % t or t < max(1, w)
+           for n, t, w in zip(space, base_tile, prog.widths)):
+        base_tile = decision.best_cfa().candidate.tile
+    base = hand_coded_baselines(prog, IterSpace(space), model, tile=base_tile)
+    gain = decision.best.effective_bw / max(
+        s.effective_bw for s in base.values()
+    )
+    print(f"     best hand-coded plan beaten by {gain:.2f}x "
+          f"(winner: {decision.best.candidate.key})\n")
+    return {
+        "program": name,
+        "space": list(space),
+        "model": model.name,
+        "seed": decision.seed,
+        "evaluated": decision.evaluated,
+        "from_cache": decision.from_cache,
+        "gain_vs_hand_coded": gain,
+        "winner": decision.best.candidate.key,
+        "winner_eff_frac": decision.best.peak_fraction_effective,
+        "ranked": json.loads(decision.to_json())["ranked"][: args.top],
     }
-    mf = model_flops_per_device(cfg, cell, nd)
-    rec = {
-        "tag": tag, "arch": arch, "cell": cell,
-        "flops": stats.flops,
-        "collective_bytes": stats.collective_bytes,
-        "collective_counts": {k: int(v) for k, v in stats.collective_counts.items()},
-        "hbm_analytic_bytes": hbm_lb,
-        "hbm_parsed_bytes": stats.hbm_traffic_bytes,
-        "terms_s": terms,
-        "dominant": max(terms, key=terms.get),
-        "roofline_fraction": (mf / PEAK_FLOPS) / max(terms.values()),
-        "temp_gib": mem.temp_size_in_bytes / 2**30,
-        "compile_s": round(time.time() - t0, 1),
-    }
-    OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / f"{tag}.json").write_text(json.dumps(rec, indent=1))
-    t = terms
-    print(f"{tag}: frac={rec['roofline_fraction']:.4f} dominant={rec['dominant']} "
-          f"compute={t['compute']:.3f}s mem={t['memory']:.3f}s "
-          f"coll={t['collective']:.3f}s coll_GiB={coll/2**30:.1f} "
-          f"temp={rec['temp_gib']:.1f}GiB", flush=True)
-    return rec
 
 
-def h1_deepseek_train(only=None):
-    """Collective-bound cell: gradient reduce-scatter + remat policy."""
-    arch, cell = "deepseek-67b", "train_4k"
-    cfg = get_config(arch)
-    base_hp = TrainHParams(accum=4, shard_grads=False)
-    variants = [
-        ("h1_baseline", base_hp),
-        ("h1_shard_grads", dataclasses.replace(base_hp, shard_grads=True)),
-        ("h1_remat_dots", dataclasses.replace(base_hp, shard_grads=True,
-                                              remat_policy="dots")),
-    ]
-    for tag, hp in variants:
-        if only and only not in tag:
-            continue
-        measure(tag, arch, cell, cfg, hp)
-
-
-def h2_deepseek_decode(only=None):
-    """Memory-bound decode: fp8 KV cache."""
-    arch, cell = "deepseek-67b", "decode_32k"
-    base = get_config(arch)
-    variants = [
-        ("h2_baseline_bf16", base),
-        ("h2_fp8_cache", dataclasses.replace(base, kv_cache_dtype="float8_e4m3fn")),
-    ]
-    for tag, cfg in variants:
-        if only and only not in tag:
-            continue
-        measure(tag, arch, cell, cfg)
-
-
-def h3_mamba_chunk(only=None):
-    """Paper-representative: SSD chunk (facet/tile) size sweep."""
-    arch, cell = "mamba2-370m", "train_4k"
-    base = get_config(arch)
-    for chunk in (64, 128, 256):
-        tag = f"h3_chunk{chunk}"
-        if only and only not in tag:
-            continue
-        cfg = dataclasses.replace(base, ssm_chunk=chunk)
-        measure(tag, arch, cell, cfg, TrainHParams(accum=1, shard_grads=False)
-                if chunk == -1 else None)
-
-
-def h2b_serving_sharding(only=None):
-    """Serving weights without FSDP (no per-layer param all-gathers) +
-    fp8 cache — the combined decode configuration."""
-    if only and "h2b" not in only:
-        return
-    arch, cell = "deepseek-67b", "decode_32k"
-    cfg = dataclasses.replace(get_config(arch), kv_cache_dtype="float8_e4m3fn")
-    measure("h2b_serving_params_fp8", arch, cell, cfg)
-
-
-def h4_parallelism_policy(only=None):
-    """Small-d_model archs: pure DP (model axis folded into batch) vs TP."""
-    for arch in ("qwen3-0.6b", "mamba2-370m"):
-        for mode in ("tp", "dp"):
-            tag = f"h4_{arch.split('-')[0]}_{mode}"
-            if only and only not in tag:
-                continue
-            cfg = dataclasses.replace(get_config(arch), parallelism=mode)
-            measure(tag, arch, "train_4k", cfg)
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--program", choices=sorted(PROGRAMS), default=None,
+                    help="one benchmark (default: the whole Table I suite)")
+    ap.add_argument("--space", type=int, nargs="+", default=None,
+                    help="iteration-space sizes (default: 3x the default tile)")
+    ap.add_argument("--model", choices=sorted(MODELS), default="axi-zc706")
+    ap.add_argument("--budget", type=int, default=96,
+                    help="max candidate evaluations per program")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--top", type=int, default=8, help="rows to print/record")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore and do not write the on-disk decision cache")
+    ap.add_argument("--cache-dir", default=None,
+                    help="override the decision cache directory")
     args = ap.parse_args()
-    h1_deepseek_train(args.only)
-    h2_deepseek_decode(args.only)
-    h3_mamba_chunk(args.only)
-    h2b_serving_sharding(args.only)
-    h4_parallelism_policy(args.only)
+
+    model = MODELS[args.model]
+    names = [args.program] if args.program else sorted(PROGRAMS)
+    records = []
+    for name in names:
+        space = (
+            tuple(args.space)
+            if args.space
+            else tuple(3 * t for t in PROGRAMS[name].default_tile)
+        )
+        records.append(run_one(name, space, model, args))
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    tag = args.program or "suite"
+    out = OUT / f"{tag}_{model.name}.json"
+    out.write_text(json.dumps(records, indent=1))
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,62 @@
 Burst-friendly off-chip memory layout for tiled uniform-dependence programs:
 multi-projection facets, single-assignment, data tiling and dimension
 permutation (full-tile / inter-tile / intra-tile contiguity), plus the
-compiler pass that turns a program spec into a read->execute->write pipeline
-and the measurement machinery behind the paper's evaluation.
+compiler pass that turns a program spec into a read->execute->write pipeline,
+the layout autotuner that searches the layout family per workload, and the
+measurement machinery behind the paper's evaluation.
+
+Public API (paper section each symbol reproduces):
+
+Iteration-space machinery (``spaces``)
+    * ``IterSpace``        — rectangular iteration space ``E`` (§IV-A).
+    * ``Deps``             — uniform, all-backwards dependence pattern (§IV-D/E).
+    * ``Tiling``           — rectangular tile sizes ``t_1..t_d`` (§IV-B).
+    * ``facet_widths``     — facet thickness ``w_k = max_q |e_k . B_q|`` (§IV-F3).
+    * ``flow_in_points``   — a tile's flow-in set ``phi_i(T)`` (appendix A).
+    * ``flow_out_points``  — a tile's flow-out set ``phi_o(T)`` (appendix A).
+    * ``facet_points``     — the k-th facet ``S_k(T)`` of a tile (appendix B).
+    * ``neighbor_offsets`` — backward neighbor tiles by level (§IV-D).
+
+Facet layout (``facets``)
+    * ``FacetSpec``          — one facet array's permuted layout (§IV-F..I).
+    * ``build_facet_specs``  — the facet family for (space, deps, tiling),
+      parameterised by extension dirs and contiguity level (§IV-G/H/I).
+    * ``extension_dir``      — the paper's cyclic inter-tile direction (§IV-H).
+    * ``CONTIGUITY_LEVELS``  — the three cumulative levels (§IV-G/H/I).
+
+Packing (``allocation``)
+    * ``pack_facet`` / ``pack_all`` / ``unpack_into`` — canonical array <->
+      facet storage converters (§IV-F4 single-assignment allocation).
+
+Burst plans (``plans``)
+    * ``TransferPlan``         — exact per-tile burst statistics (§V-C).
+    * ``count_runs``           — maximal contiguous runs of an address set.
+    * ``cfa_plan``             — CFA reads/writes, boxed per §V-C1.
+    * ``original_layout_plan`` — Bayliss [16] row-major baseline (Fig. 15).
+    * ``bounding_box_plan``    — Pouchet [8] bounding-box baseline (Fig. 15).
+    * ``data_tiling_plan``     — Ozturk [19] block-major baseline (Fig. 15).
+    * ``interior_tile``        — the representative steady-state tile (§V-C).
+
+Bandwidth model (``bandwidth``)
+    * ``BurstModel``      — ``time = sum(T_setup + bytes/BW)`` per burst (§II-E).
+    * ``BandwidthReport`` — raw/effective bandwidth of a plan (Fig. 15 axes).
+    * ``AXI_ZC706``       — the paper's ZC706 AXI HP port model (§VI-A).
+    * ``TPU_V5E_HBM``     — the TPU DMA adaptation target (§VI-A analogue).
+
+Benchmarks (``programs``)
+    * ``StencilProgram`` — a Table I benchmark in post-skew normal form (§IV-E).
+    * ``PROGRAMS`` / ``get_program`` — the Table I suite registry.
+
+Pipeline (``transform``)
+    * ``CFAPipeline`` — the read->execute->write tile pipeline of §V (Fig. 13);
+      ``CFAPipeline.from_autotuned`` builds it from an autotuned layout.
+
+Autotuner (``autotune``) — the §VI "which layout?" question made a subsystem
+    * ``autotune``         — staged search over tilings x extension dirs x
+      contiguity levels, scored by ``BurstModel``, with an on-disk cache.
+    * ``LayoutCandidate`` / ``ScoredLayout`` / ``LayoutDecision`` — the search
+      space, the per-candidate score, and the ranked result.
+    * ``candidate_tilings`` / ``hand_coded_baselines`` — enumeration helpers.
 """
 from .spaces import (
     IterSpace,
@@ -16,7 +70,12 @@ from .spaces import (
     facet_points,
     neighbor_offsets,
 )
-from .facets import FacetSpec, build_facet_specs, extension_dir
+from .facets import (
+    FacetSpec,
+    build_facet_specs,
+    extension_dir,
+    CONTIGUITY_LEVELS,
+)
 from .allocation import pack_facet, pack_all, unpack_into
 from .plans import (
     TransferPlan,
@@ -29,16 +88,26 @@ from .plans import (
 )
 from .bandwidth import BurstModel, BandwidthReport, AXI_ZC706, TPU_V5E_HBM
 from .programs import StencilProgram, PROGRAMS, get_program
+from .autotune import (
+    LayoutCandidate,
+    ScoredLayout,
+    LayoutDecision,
+    autotune,
+    candidate_tilings,
+    hand_coded_baselines,
+)
 from .transform import CFAPipeline
 
 __all__ = [
     "IterSpace", "Deps", "Tiling", "facet_widths",
     "flow_in_points", "flow_out_points", "facet_points", "neighbor_offsets",
-    "FacetSpec", "build_facet_specs", "extension_dir",
+    "FacetSpec", "build_facet_specs", "extension_dir", "CONTIGUITY_LEVELS",
     "pack_facet", "pack_all", "unpack_into",
     "TransferPlan", "count_runs", "cfa_plan", "original_layout_plan",
     "bounding_box_plan", "data_tiling_plan", "interior_tile",
     "BurstModel", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
     "StencilProgram", "PROGRAMS", "get_program",
+    "LayoutCandidate", "ScoredLayout", "LayoutDecision",
+    "autotune", "candidate_tilings", "hand_coded_baselines",
     "CFAPipeline",
 ]

@@ -1,0 +1,571 @@
+"""Layout autotuner: search the CFA layout family for the fastest layout.
+
+The paper evaluates *one* layout per benchmark — the final CFA family with
+cyclic extension directions, intra-tile contiguity, and a hand-picked tile
+size (Table I).  Iris (Soldavini et al., 2022) and the irredundant-layout
+follow-up (Ferry et al., 2024) both show the real bandwidth wins come from
+*searching* the layout space per workload.  This module is that search:
+
+    given   a StencilProgram, an IterSpace and a BurstModel,
+    explore  candidate Tilings x extension-direction assignments x
+             contiguity levels (full-tile / inter-tile / intra-tile, §IV-G/H/I),
+             plus the paper's three baselines as hand-coded seeds,
+    score    each candidate's interior-tile TransferPlan under the BurstModel
+             (modeled effective bandwidth = useful bytes / modeled time),
+    return   a ranked LayoutDecision.
+
+The hand-coded plans (``cfa_plan`` at the program's default tile,
+``original_layout_plan``, ``bounding_box_plan``, ``data_tiling_plan``) are
+always seeded into the candidate set, so the decision's best candidate scores
+at least as well as every baseline by construction.
+
+Decisions are memoised in a persistent on-disk cache keyed by
+(program, space, model, search parameters) so repeated runs are free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import math
+import os
+import tempfile
+from pathlib import Path
+from typing import Sequence
+
+import numpy as np
+
+from .bandwidth import AXI_ZC706, BandwidthReport, BurstModel
+from .facets import CONTIGUITY_LEVELS, extension_dir
+from .plans import (
+    TransferPlan,
+    bounding_box_plan,
+    cfa_plan,
+    data_tiling_plan,
+    interior_tile,
+    original_layout_plan,
+)
+from .programs import StencilProgram, get_program
+from .spaces import IterSpace, Tiling
+
+__all__ = [
+    "LayoutCandidate",
+    "ScoredLayout",
+    "LayoutDecision",
+    "autotune",
+    "candidate_tilings",
+    "hand_coded_baselines",
+    "default_cache_dir",
+    "clear_cache",
+]
+
+_CACHE_VERSION = 1
+
+
+# --------------------------------------------------------------------------
+# Candidates
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutCandidate:
+    """One point of the layout search space.
+
+    ``scheme`` is one of ``cfa`` (the paper's facet family), ``original``
+    (Bayliss [16]), ``bbox`` (Pouchet [8]) or ``data-tiling`` (Ozturk [19]).
+    ``ext_dirs``/``contiguity`` parameterise the CFA family (§IV-H/I);
+    ``block`` parameterises data tiling.
+    """
+
+    scheme: str
+    tile: tuple[int, ...]
+    ext_dirs: tuple[tuple[int, int], ...] | None = None  # (facet axis, c_k)
+    contiguity: str | None = None
+    block: tuple[int, ...] | None = None
+
+    @property
+    def key(self) -> str:
+        """Canonical, deterministic identity string (also the rank tiebreak)."""
+        parts = [self.scheme, "x".join(map(str, self.tile))]
+        if self.ext_dirs is not None:
+            parts.append("e" + ",".join(f"{k}:{c}" for k, c in self.ext_dirs))
+        if self.contiguity is not None:
+            parts.append(self.contiguity)
+        if self.block is not None:
+            parts.append("b" + "x".join(map(str, self.block)))
+        return "/".join(parts)
+
+    def plan(self, space: IterSpace, program: StencilProgram) -> TransferPlan:
+        """The candidate's interior-tile transfer plan."""
+        tiling = Tiling(self.tile)
+        tile = interior_tile(space, tiling)
+        if self.scheme == "cfa":
+            return cfa_plan(
+                space,
+                program.deps,
+                tiling,
+                tile,
+                ext_dirs=dict(self.ext_dirs) if self.ext_dirs is not None else None,
+                contiguity=self.contiguity or "intra-tile",
+            )
+        if self.scheme == "original":
+            return original_layout_plan(space, program.deps, tiling, tile)
+        if self.scheme == "bbox":
+            return bounding_box_plan(space, program.deps, tiling, tile)
+        if self.scheme == "data-tiling":
+            return data_tiling_plan(space, program.deps, tiling, tile, block=self.block)
+        raise ValueError(f"unknown layout scheme {self.scheme!r}")
+
+    def is_default_cfa_layout(self, ndim: int) -> bool:
+        """True iff this is the paper's final layout family (the only one the
+        ``facet_fetch`` Pallas kernel's BlockSpecs hard-code)."""
+        if self.scheme != "cfa" or (self.contiguity or "intra-tile") != "intra-tile":
+            return False
+        if self.ext_dirs is None:
+            return True
+        return all(c == extension_dir(k, ndim) for k, c in self.ext_dirs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoredLayout:
+    """A candidate plus its BurstModel score (per interior tile)."""
+
+    candidate: LayoutCandidate
+    n_read_bursts: int
+    n_write_bursts: int
+    transferred: int  # elements moved (incl. redundancy)
+    useful: int  # elements actually needed
+    redundancy: float
+    time_s: float  # modeled transfer time for one interior tile
+    raw_bw: float
+    effective_bw: float  # useful bytes / modeled time — the ranking metric
+    peak_fraction_effective: float
+
+    @property
+    def n_bursts(self) -> int:
+        return self.n_read_bursts + self.n_write_bursts
+
+    @staticmethod
+    def from_plan(
+        candidate: LayoutCandidate, plan: TransferPlan, model: BurstModel
+    ) -> "ScoredLayout":
+        rep = BandwidthReport.evaluate(plan, model)
+        t = model.time_s(plan.read_runs) + model.time_s(plan.write_runs)
+        return ScoredLayout(
+            candidate=candidate,
+            n_read_bursts=plan.n_read_bursts,
+            n_write_bursts=plan.n_write_bursts,
+            transferred=plan.transferred,
+            useful=plan.useful,
+            redundancy=plan.redundancy,
+            time_s=t,
+            raw_bw=rep.raw_bw,
+            effective_bw=rep.effective_bw,
+            peak_fraction_effective=rep.peak_fraction_effective,
+        )
+
+
+def _rank_key(s: ScoredLayout) -> tuple:
+    # Highest effective bandwidth first; deterministic tiebreaks.
+    return (-s.effective_bw, s.n_bursts, s.redundancy, s.candidate.key)
+
+
+# --------------------------------------------------------------------------
+# Decision
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutDecision:
+    """Ranked outcome of one autotuning run (JSON round-trippable)."""
+
+    program: str
+    space: tuple[int, ...]
+    widths: tuple[int, ...]
+    model: str
+    seed: int
+    budget: int
+    evaluated: int
+    ranked: tuple[ScoredLayout, ...]  # best first
+    from_cache: bool = dataclasses.field(default=False, compare=False)
+
+    @property
+    def best(self) -> ScoredLayout:
+        return self.ranked[0]
+
+    def best_cfa(self, *, kernel_compatible: bool = False) -> ScoredLayout:
+        """Best CFA-family candidate (facet storage is what the pipeline and
+        the Pallas kernels consume).
+
+        ``kernel_compatible`` further restricts to layouts the
+        ``facet_fetch`` kernel's static BlockSpecs can address: the paper's
+        default layout, facet widths dividing the tile, and at least two
+        tiles per axis (so an interior exists).
+        """
+        d = len(self.space)
+        for s in self.ranked:
+            c = s.candidate
+            if c.scheme != "cfa":
+                continue
+            if kernel_compatible:
+                if not c.is_default_cfa_layout(d):
+                    continue
+                if any(w and t % w for w, t in zip(self.widths, c.tile)):
+                    continue
+                if any(n // t < 2 for n, t in zip(self.space, c.tile)):
+                    continue
+            return s
+        raise LookupError(
+            f"no {'kernel-compatible ' if kernel_compatible else ''}CFA candidate "
+            f"in decision for {self.program} @ {self.space}"
+        )
+
+    # -- serialisation ------------------------------------------------------
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d.pop("from_cache")
+        d["version"] = _CACHE_VERSION
+        return json.dumps(d, indent=1)
+
+    @staticmethod
+    def from_json(text: str) -> "LayoutDecision":
+        d = json.loads(text)
+        if d.pop("version", None) != _CACHE_VERSION:
+            raise ValueError("autotune cache version mismatch")
+        ranked = []
+        for s in d.pop("ranked"):
+            c = s.pop("candidate")
+            cand = LayoutCandidate(
+                scheme=c["scheme"],
+                tile=tuple(c["tile"]),
+                ext_dirs=tuple(map(tuple, c["ext_dirs"])) if c["ext_dirs"] is not None else None,
+                contiguity=c["contiguity"],
+                block=tuple(c["block"]) if c["block"] is not None else None,
+            )
+            ranked.append(ScoredLayout(candidate=cand, **s))
+        return LayoutDecision(
+            program=d["program"],
+            space=tuple(d["space"]),
+            widths=tuple(d["widths"]),
+            model=d["model"],
+            seed=d["seed"],
+            budget=d["budget"],
+            evaluated=d["evaluated"],
+            ranked=tuple(ranked),
+        )
+
+    def summary(self, top: int = 8) -> str:
+        """Human-readable ranking table (used by the hillclimb CLI)."""
+        lines = [
+            f"{self.program} @ space {self.space}  model={self.model}  "
+            f"seed={self.seed}  evaluated={self.evaluated} candidates"
+            f"{'  [cache]' if self.from_cache else ''}",
+            f"{'rank':>4} {'eff-bw':>8} {'raw-bw':>8} {'bursts':>6} "
+            f"{'redun':>6}  candidate",
+        ]
+        for i, s in enumerate(self.ranked[:top]):
+            peak = s.effective_bw / s.peak_fraction_effective if s.peak_fraction_effective else 0.0
+            raw_frac = s.raw_bw / peak if peak else 0.0
+            lines.append(
+                f"{i:>4} {s.peak_fraction_effective:>7.1%} {raw_frac:>7.1%} "
+                f"{s.n_bursts:>6} {s.redundancy:>6.1%}  {s.candidate.key}"
+            )
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Candidate enumeration
+# --------------------------------------------------------------------------
+
+
+def candidate_tilings(
+    widths: Sequence[int],
+    space_sizes: Sequence[int],
+    *,
+    max_halo_elems: int | None = 64 * 1024,
+) -> list[tuple[int, ...]]:
+    """Legal rectangular tilings: per axis, divisors of N_a in [w_a, N_a).
+
+    A tile spanning a whole axis degenerates the tiling (no flow across that
+    axis), so it is only allowed when no proper divisor fits the facet width.
+    ``max_halo_elems`` bounds the on-chip halo buffer prod(t_a + w_a) — the
+    paper's BRAM constraint, our VMEM constraint.  Deterministic order:
+    descending tile volume (longer bursts first), then lexicographic.
+    """
+    per_axis: list[list[int]] = []
+    for n, w in zip(space_sizes, widths):
+        lo = max(1, w)
+        divs = [t for t in range(lo, n + 1) if n % t == 0]
+        proper = [t for t in divs if t < n]
+        per_axis.append(proper or divs)
+    out = []
+    for t in itertools.product(*per_axis):
+        halo = math.prod(ta + wa for ta, wa in zip(t, widths))
+        if max_halo_elems is not None and halo > max_halo_elems:
+            continue
+        out.append(t)
+    out.sort(key=lambda t: (-math.prod(t), t))
+    return out
+
+
+def _ext_dir_assignments(widths: Sequence[int]) -> list[tuple[tuple[int, int], ...]]:
+    """All per-facet extension-direction assignments (c_k != k, §IV-H)."""
+    d = len(widths)
+    axes = [k for k in range(d) if widths[k] > 0]
+    if d == 1:
+        return [tuple((k, k) for k in axes)]
+    choices = [[(k, c) for c in range(d) if c != k] for k in axes]
+    return [tuple(combo) for combo in itertools.product(*choices)]
+
+
+def hand_coded_baselines(
+    program: StencilProgram,
+    space: IterSpace,
+    model: BurstModel,
+    tile: Sequence[int] | None = None,
+) -> dict[str, ScoredLayout]:
+    """The paper's hand-coded plans at one tile size, scored under ``model``.
+
+    These are the seeds the autotuner must beat (or match): ``cfa_plan`` with
+    the default layout, ``original_layout_plan``, ``bounding_box_plan``, and
+    ``data_tiling_plan`` with the block-size sweep of Fig. 15.
+    """
+    t = tuple(tile) if tile is not None else program.default_tile
+    cands = {
+        "cfa": LayoutCandidate("cfa", t, contiguity="intra-tile"),
+        "original": LayoutCandidate("original", t),
+        "bbox": LayoutCandidate("bbox", t),
+    }
+    for div in (1, 2, 4):
+        blk = tuple(max(1, x // div) for x in t)
+        cands[f"data-tiling/{div}"] = LayoutCandidate("data-tiling", t, block=blk)
+    out = {}
+    for name, cand in cands.items():
+        out[name] = ScoredLayout.from_plan(cand, cand.plan(space, program), model)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Cache
+# --------------------------------------------------------------------------
+
+
+def default_cache_dir() -> Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro-cfa" / "autotune"
+
+
+def clear_cache(cache_dir: Path | str | None = None) -> int:
+    """Delete all cached decisions; returns the number removed."""
+    root = Path(cache_dir) if cache_dir is not None else default_cache_dir()
+    n = 0
+    if root.is_dir():
+        for f in root.glob("*.json"):
+            f.unlink()
+            n += 1
+    return n
+
+
+def _cache_key(
+    program: StencilProgram,
+    space: IterSpace,
+    model: BurstModel,
+    seed: int,
+    budget: int,
+    tilings: Sequence[tuple[int, ...]] | None,
+    contiguity_levels: Sequence[str],
+    max_halo_elems: int | None,
+    refine_top: int,
+) -> str:
+    blob = json.dumps(
+        {
+            "version": _CACHE_VERSION,
+            "program": program.name,
+            "deps": list(map(list, program.deps.vectors)),
+            "space": list(space.sizes),
+            "model": [model.name, model.peak_bytes_per_s, model.setup_s, model.elem_bytes],
+            "seed": seed,
+            "budget": budget,
+            "tilings": list(map(list, tilings)) if tilings is not None else None,
+            "contiguity": list(contiguity_levels),
+            "max_halo_elems": max_halo_elems,
+            "refine_top": refine_top,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:32]
+
+
+def _cache_load(path: Path) -> LayoutDecision | None:
+    try:
+        return LayoutDecision.from_json(path.read_text())
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
+def _cache_store(path: Path, decision: LayoutDecision) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            fh.write(decision.to_json())
+        os.replace(tmp, path)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+# --------------------------------------------------------------------------
+# The search
+# --------------------------------------------------------------------------
+
+
+def _sample(items: list, k: int, rng: np.random.Generator) -> list:
+    """First half deterministically (best-guess order), rest seeded-random."""
+    if len(items) <= k:
+        return list(items)
+    head = items[: k // 2]
+    tail = items[k // 2 :]
+    pick = rng.choice(len(tail), size=k - len(head), replace=False)
+    return head + [tail[i] for i in sorted(pick)]
+
+
+def autotune(
+    program: StencilProgram | str,
+    space: IterSpace | Sequence[int],
+    model: BurstModel = AXI_ZC706,
+    *,
+    seed: int = 0,
+    budget: int = 96,
+    tilings: Sequence[Sequence[int]] | None = None,
+    contiguity_levels: Sequence[str] = CONTIGUITY_LEVELS,
+    max_halo_elems: int | None = 64 * 1024,
+    refine_top: int = 3,
+    cache: bool = True,
+    cache_dir: Path | str | None = None,
+) -> LayoutDecision:
+    """Search the layout space for ``program`` on ``space`` under ``model``.
+
+    Three staged passes, deterministic given ``seed``:
+
+    1. *seeds* — the hand-coded baselines at the program's default tile
+       (guaranteeing the decision never scores below them); these ~6 plans
+       are always scored, even when ``budget`` is smaller;
+    2. *tiling sweep* — the paper-default CFA layout across candidate
+       tilings (``candidate_tilings`` unless ``tilings`` overrides);
+    3. *layout refinement* — extension-direction assignments x contiguity
+       levels on the ``refine_top`` best tilings from stage 2, plus a
+       data-tiling block sweep on the best tiling.
+
+    Stages 2 and 3 stay within ``budget`` total evaluations (so
+    ``decision.evaluated <= max(budget, number of seeds)``).
+
+    Results are memoised on disk (``cache_dir`` or $REPRO_AUTOTUNE_CACHE or
+    ``~/.cache/repro-cfa/autotune``) keyed by every argument above, so a
+    repeated call is a single file read (``decision.from_cache`` is True).
+    """
+    prog = get_program(program) if isinstance(program, str) else program
+    sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
+    if sp.ndim != prog.ndim:
+        raise ValueError(
+            f"space {sp.sizes} has {sp.ndim} dims but program {prog.name!r} "
+            f"is {prog.ndim}-D"
+        )
+    til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
+
+    key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
+                     max_halo_elems, refine_top)
+    path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
+    if cache:
+        hit = _cache_load(path)
+        if hit is not None:
+            return dataclasses.replace(hit, from_cache=True)
+
+    rng = np.random.default_rng(seed)
+    widths = prog.widths
+
+    scored: dict[str, ScoredLayout] = {}
+
+    def score(cand: LayoutCandidate) -> ScoredLayout | None:
+        if cand.key in scored:
+            return scored[cand.key]
+        try:
+            plan = cand.plan(sp, prog)
+        except ValueError:
+            return None  # illegal candidate (e.g. w > t); skip
+        # (AssertionError deliberately propagates: it flags a layout bug,
+        # e.g. a non-contiguous facet write, never an illegal candidate.)
+        s = ScoredLayout.from_plan(cand, plan, model)
+        scored[cand.key] = s
+        return s
+
+    # -- stage 1: hand-coded seeds -----------------------------------------
+    default_tile_ok = all(
+        n % t == 0 and t >= max(1, w)
+        for n, t, w in zip(sp.sizes, prog.default_tile, widths)
+    )
+    if default_tile_ok:
+        for s in hand_coded_baselines(prog, sp, model).values():
+            scored.setdefault(s.candidate.key, s)
+
+    # -- stage 2: default layout across tilings ----------------------------
+    all_tilings = list(til) if til is not None else candidate_tilings(
+        widths, sp.sizes, max_halo_elems=max_halo_elems
+    )
+    remaining = max(0, budget - len(scored))
+    for t in _sample(all_tilings, remaining * 2 // 3, rng):
+        score(LayoutCandidate("cfa", tuple(t), contiguity="intra-tile"))
+
+    # -- stage 3: layout refinement on the best tilings --------------------
+    d = sp.ndim
+    cfa_scored = sorted(
+        (s for s in scored.values() if s.candidate.scheme == "cfa"), key=_rank_key
+    )
+    top_tiles = []
+    for s in cfa_scored:
+        if s.candidate.tile not in top_tiles:
+            top_tiles.append(s.candidate.tile)
+        if len(top_tiles) >= refine_top:
+            break
+    if top_tiles and len(scored) < budget:
+        # data-tiling block sweep at the winning tiling
+        t = top_tiles[0]
+        for div in (1, 2, 4):
+            if len(scored) >= budget:
+                break
+            blk = tuple(max(1, x // div) for x in t)
+            score(LayoutCandidate("data-tiling", t, block=blk))
+    variants = []
+    for t in top_tiles:
+        for lvl in contiguity_levels:
+            for ext in _ext_dir_assignments(widths):
+                # the cyclic default is the same layout as ext_dirs=None —
+                # canonicalise so it dedupes against the stage-2 candidate
+                if all(c == extension_dir(k, d) for k, c in ext):
+                    ext = None
+                v = LayoutCandidate("cfa", t, ext_dirs=ext, contiguity=lvl)
+                if v.key not in scored and all(x.key != v.key for x in variants):
+                    variants.append(v)
+    remaining = max(0, budget - len(scored))
+    for v in _sample(variants, remaining, rng):
+        score(v)
+
+    decision = LayoutDecision(
+        program=prog.name,
+        space=sp.sizes,
+        widths=widths,
+        model=model.name,
+        seed=seed,
+        budget=budget,
+        evaluated=len(scored),
+        ranked=tuple(sorted(scored.values(), key=_rank_key)),
+    )
+    if cache:
+        _cache_store(path, decision)
+    return decision

@@ -23,8 +23,8 @@ with the following paper-faithful layout rules:
   the last inner dim, so corner sets from 3rd-level neighbours are contiguous
   suffixes of a facet block.
 
-We assign extension directions cyclically, ``c_k = (k+1) mod d``; for d = 3
-this reproduces exactly the paper's final layout family
+By default we assign extension directions cyclically, ``c_k = (k+1) mod d``;
+for d = 3 this reproduces exactly the paper's final layout family
 
     facet_i[ii][kk][jj] [j][k]          (w_i folded away when w_i == 1)
     facet_j[jj][ii][kk] [k][i][j%w_j]
@@ -33,18 +33,37 @@ this reproduces exactly the paper's final layout family
 and yields the paper's 4-bursts-per-3D-tile read plan.  For d >= 4 some
 k-th-level neighbours cannot be merged (paper §IV-J) — the planner then simply
 counts the extra bursts; nothing breaks.
+
+Both the extension-direction assignment and the contiguity level are
+*layout knobs*: ``build_facet_specs`` accepts any per-facet extension
+direction and any of the three cumulative contiguity levels
+
+    "full-tile"   §IV-G only: blocked facets, canonical inner order
+    "inter-tile"  + §IV-H: extension dim first inner / last outer
+    "intra-tile"  + §IV-I: modulo dim last inner (the paper's final layout)
+
+so the layout autotuner (``repro.core.cfa.autotune``) can search the whole
+family rather than hard-coding the paper's single point.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 from .spaces import Deps, IterSpace, Tiling, facet_widths
 
-__all__ = ["FacetSpec", "build_facet_specs", "extension_dir"]
+__all__ = [
+    "FacetSpec",
+    "build_facet_specs",
+    "extension_dir",
+    "CONTIGUITY_LEVELS",
+]
+
+#: The paper's three cumulative contiguity levels (§IV-G/H/I), weakest first.
+CONTIGUITY_LEVELS = ("full-tile", "inter-tile", "intra-tile")
 
 
 def extension_dir(axis: int, ndim: int) -> int:
@@ -64,6 +83,11 @@ class FacetSpec:
     num_tiles: tuple[int, ...]
     outer_axes: tuple[int, ...]  # order of tile-coordinate dims
     inner_axes: tuple[int, ...]  # order of intra-tile dims; ``axis`` = modulo dim
+    ext_dir: int = -1  # inter-tile contiguity direction c_k; -1 = cyclic default
+
+    def __post_init__(self) -> None:
+        if self.ext_dir < 0:
+            object.__setattr__(self, "ext_dir", extension_dir(self.axis, self.ndim))
 
     @property
     def ndim(self) -> int:
@@ -136,13 +160,51 @@ class FacetSpec:
         return int(idx @ strides[: len(self.outer_axes)])
 
 
+def _facet_axis_orders(
+    k: int, c: int, d: int, contiguity: str
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """(outer_axes, inner_axes) for facet ``k`` with extension dir ``c`` at the
+    requested contiguity level (levels are cumulative, §IV-G -> H -> I)."""
+    if contiguity not in CONTIGUITY_LEVELS:
+        raise ValueError(f"contiguity must be one of {CONTIGUITY_LEVELS}: {contiguity!r}")
+    if contiguity == "full-tile" or c == k:
+        # §IV-G only: blocked facet, canonical order, no extension direction.
+        outer = (k, *(a for a in range(d) if a != k))
+        inner = tuple(range(d))
+        if contiguity == "intra-tile" and c == k:
+            inner = (*(a for a in range(d) if a != k), k)
+        return outer, inner
+    rest = [a for a in range(d) if a not in (k, c)]
+    # outer: k first (single-assignment axis), others ascending, c's tile
+    # coordinate last (inter-tile contiguity, §IV-H).
+    outer = (k, *rest, c)
+    if contiguity == "inter-tile":
+        # inner: extension dim first, remaining axes canonical.
+        inner = (c, *(a for a in range(d) if a != c))
+    else:
+        # intra-tile (§IV-I): additionally the modulo dim (axis k) goes last.
+        inner = (c, *rest, k)
+    return outer, inner
+
+
 def build_facet_specs(
-    space: IterSpace, deps: Deps, tiling: Tiling
+    space: IterSpace,
+    deps: Deps,
+    tiling: Tiling,
+    *,
+    ext_dirs: Mapping[int, int] | Sequence[tuple[int, int]] | None = None,
+    contiguity: str = "intra-tile",
 ) -> dict[int, FacetSpec]:
-    """Construct the CFA facet family for a (space, deps, tiling) triple."""
+    """Construct a CFA facet family for a (space, deps, tiling) triple.
+
+    ``ext_dirs`` maps facet axis -> inter-tile extension direction (defaults
+    to the cyclic ``(k+1) mod d`` of the paper); ``contiguity`` selects one of
+    ``CONTIGUITY_LEVELS``.  The defaults reproduce the paper's final layout.
+    """
     d = space.ndim
     widths = facet_widths(deps)
     nt = tiling.num_tiles(space)
+    ext = dict(ext_dirs) if ext_dirs is not None else {}
     specs: dict[int, FacetSpec] = {}
     for k in range(d):
         w = widths[k]
@@ -153,15 +215,10 @@ def build_facet_specs(
                 f"facet width {w} exceeds tile size {tiling.sizes[k]} on axis {k}; "
                 "tiles must be at least as deep as the dependence pattern"
             )
-        c = extension_dir(k, d)
-        # outer: k first (single-assignment axis), others ascending, c's tile
-        # coordinate last (inter-tile contiguity).
-        rest = [a for a in range(d) if a not in (k, c)]
-        outer = (k, *rest, c) if c != k else (k, *rest)
-        # inner: c first (extension dim), other projected axes ascending,
-        # modulo dim (axis k) last (intra-tile contiguity).
-        mids = [a for a in range(d) if a not in (k, c)]
-        inner = (c, *mids, k) if c != k else (*mids, k)
+        c = ext.get(k, extension_dir(k, d))
+        if not (0 <= c < d) or (c == k and d > 1):
+            raise ValueError(f"invalid extension direction {c} for facet axis {k}")
+        outer, inner = _facet_axis_orders(k, c, d, contiguity)
         specs[k] = FacetSpec(
             axis=k,
             width=w,
@@ -169,5 +226,6 @@ def build_facet_specs(
             num_tiles=nt,
             outer_axes=outer,
             inner_axes=inner,
+            ext_dir=c,
         )
     return specs

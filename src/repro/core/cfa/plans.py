@@ -19,12 +19,11 @@ the measurement substrate behind the Fig. 15 reproduction:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Mapping, Sequence
 
 import numpy as np
 
-from .facets import FacetSpec, build_facet_specs, extension_dir
+from .facets import FacetSpec, build_facet_specs
 from .spaces import (
     Deps,
     IterSpace,
@@ -165,7 +164,7 @@ def _assign_hosts(
             # prefer host h whose extension direction is the other crossed
             # axis: the piece then merges with h's first-level facet read.
             for h in specs:
-                c = extension_dir(h, d)
+                c = specs[h].ext_dir
                 ok = sub_cand[:, h] & (sub_delta[:, c] < 0) & (host < 0)
                 host[ok] = h
             # fallback (non-mergeable pair, paper §IV-J): first candidate
@@ -173,7 +172,7 @@ def _assign_hosts(
             host[rem] = np.argmax(sub_cand[rem], axis=1)
         else:
             # corner pieces: host minimising leftover runs = thinnest extension
-            order = sorted(specs, key=lambda h: (widths[extension_dir(h, d)], -h))
+            order = sorted(specs, key=lambda h: (widths[specs[h].ext_dir], -h))
             for h in order:
                 ok = sub_cand[:, h] & (host < 0)
                 host[ok] = h
@@ -197,18 +196,23 @@ def cfa_plan(
     tile: Sequence[int] | None = None,
     *,
     boxed: bool = True,
+    ext_dirs: Mapping[int, int] | None = None,
+    contiguity: str = "intra-tile",
 ) -> TransferPlan:
     """CFA transfer plan for one tile.
 
     Writes: every facet block in full — one burst per facet by construction.
     Reads: flow-in points fetched from their host facets; ``boxed`` applies
     the paper's rectangular over-approximation (merged bursts + guards),
-    otherwise exact guarded runs are counted.
+    otherwise exact guarded runs are counted.  ``ext_dirs``/``contiguity``
+    select a layout variant (see ``build_facet_specs``); the defaults are the
+    paper's final layout, which the autotuner treats as one candidate among
+    the whole family.
     """
     if tile is None:
         tile = interior_tile(space, tiling)
     widths = facet_widths(deps)
-    specs = build_facet_specs(space, deps, tiling)
+    specs = build_facet_specs(space, deps, tiling, ext_dirs=ext_dirs, contiguity=contiguity)
 
     fin = flow_in_points(space, deps, tiling, tile)
     hosts = _assign_hosts(fin, tile, tiling, widths, specs)

@@ -40,16 +40,71 @@ class CFAPipeline:
     program: StencilProgram
     space: IterSpace
     tiling: Tiling
+    # layout knobs (see repro.core.cfa.facets); defaults = the paper's layout
+    ext_dirs: Mapping[int, int] | tuple[tuple[int, int], ...] | None = None
+    contiguity: str = "intra-tile"
+    # the autotuner decision this pipeline was built from, if any
+    decision: object | None = dataclasses.field(default=None, repr=False, compare=False)
     specs: Mapping[int, FacetSpec] = dataclasses.field(init=False)
     num_tiles: tuple[int, ...] = dataclasses.field(init=False)
 
     def __post_init__(self) -> None:
         if self.space.ndim != 3:
             raise ValueError("the reference executor supports 3-D programs (Table I)")
-        self.specs = build_facet_specs(self.space, self.program.deps, self.tiling)
+        self.specs = build_facet_specs(
+            self.space, self.program.deps, self.tiling,
+            ext_dirs=dict(self.ext_dirs) if self.ext_dirs is not None else None,
+            contiguity=self.contiguity,
+        )
         self.num_tiles = self.tiling.num_tiles(self.space)
         if 0 not in self.specs:
             raise ValueError("time axis must carry a facet (w_0 >= 1)")
+
+    @classmethod
+    def from_autotuned(
+        cls,
+        program: StencilProgram | str,
+        space: IterSpace | tuple[int, ...],
+        *,
+        model=None,
+        decision=None,
+        kernel_compatible: bool = False,
+        **autotune_kwargs,
+    ) -> "CFAPipeline":
+        """Build the pipeline from the autotuner's winning CFA layout.
+
+        Runs ``repro.core.cfa.autotune.autotune`` (or reuses ``decision``)
+        and instantiates the pipeline at the best CFA candidate's tile sizes,
+        extension directions and contiguity level.  ``kernel_compatible``
+        restricts the choice to layouts the ``facet_fetch`` Pallas kernel can
+        address (the paper-default layout with w | t and >= 2 tiles/axis).
+        Extra keyword arguments (seed, budget, cache_dir, ...) pass through
+        to ``autotune``.
+        """
+        from .autotune import autotune
+        from .bandwidth import AXI_ZC706
+        from .programs import get_program
+
+        prog = get_program(program) if isinstance(program, str) else program
+        sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
+        if decision is None:
+            decision = autotune(prog, sp, model if model is not None else AXI_ZC706,
+                                **autotune_kwargs)
+        elif decision.program != prog.name or tuple(decision.space) != sp.sizes:
+            raise ValueError(
+                f"decision is for {decision.program!r} @ {tuple(decision.space)}, "
+                f"not {prog.name!r} @ {sp.sizes}"
+            )
+        best = decision.best_cfa(kernel_compatible=kernel_compatible)
+        cand = best.candidate
+        return cls(
+            prog,
+            sp,
+            Tiling(cand.tile),
+            ext_dirs=cand.ext_dirs,
+            contiguity=cand.contiguity or "intra-tile",
+            decision=decision,
+        )
 
     # -- storage -----------------------------------------------------------
 

@@ -6,7 +6,12 @@ import jax.numpy as jnp
 from .stencil import execute_tiles
 from .ref import execute_tiles_ref
 
-__all__ = ["execute_tiles", "execute_tiles_ref", "stencil_tile_op"]
+__all__ = [
+    "execute_tiles",
+    "execute_tiles_ref",
+    "stencil_tile_op",
+    "execute_tiles_from_autotuned",
+]
 
 
 def stencil_tile_op(
@@ -21,3 +26,26 @@ def stencil_tile_op(
     if use_kernel:
         return execute_tiles(program_name, halos, tile, interpret=interpret)
     return execute_tiles_ref(program_name, halos, tile)
+
+
+def execute_tiles_from_autotuned(
+    program_name: str,
+    halos: jnp.ndarray,
+    decision,
+    *,
+    kernel_compatible: bool = False,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Execute tile batches at the tile size an autotuned LayoutDecision chose.
+
+    ``decision`` is a ``repro.core.cfa.autotune.LayoutDecision`` (e.g. from
+    ``CFAPipeline.from_autotuned(...).decision``); the halo batch must have
+    been gathered at the decision's winning tile sizes.  When the halos came
+    from ``fetch_interior_halos_from_autotuned`` (which is restricted to
+    kernel-addressable layouts), pass ``kernel_compatible=True`` here too so
+    both wrappers resolve the *same* candidate's tile.
+    """
+    tile = tuple(decision.best_cfa(kernel_compatible=kernel_compatible).candidate.tile)
+    return stencil_tile_op(program_name, halos, tile,
+                           use_kernel=use_kernel, interpret=interpret)

@@ -1,7 +1,11 @@
-"""Unit + property tests for the CFA core (spaces, facets, plans)."""
+"""Unit tests for the CFA core (spaces, facets, plans).
+
+The hypothesis-based property tests live in ``test_cfa_properties.py`` so
+that this module collects even when ``hypothesis`` (an optional test extra,
+see pyproject.toml) is not installed.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cfa import (
     Deps,
@@ -20,7 +24,6 @@ from repro.core.cfa import (
     bounding_box_plan,
     data_tiling_plan,
 )
-from repro.core.cfa.plans import _assign_hosts
 
 
 # ---------------------------------------------------------------------------
@@ -87,68 +90,6 @@ def test_full_tile_contiguity_every_facet_single_run():
             runs = count_runs(spec.offsets(pts))
             assert len(runs) == 1
             assert runs[0] == spec.block_elems
-
-
-# ---------------------------------------------------------------------------
-# coverage property (the appendix proof, tested exhaustively on small spaces)
-# ---------------------------------------------------------------------------
-
-dep_component = st.integers(min_value=-2, max_value=0)
-
-
-@st.composite
-def dep_patterns(draw, d):
-    n = draw(st.integers(min_value=1, max_value=4))
-    vecs = []
-    for _ in range(n):
-        v = tuple(draw(dep_component) for _ in range(d))
-        vecs.append(v)
-    if all(all(c == 0 for c in v) for v in vecs):
-        vecs[0] = tuple(-1 for _ in range(d))
-    return Deps(tuple(vecs))
-
-
-@given(st.data())
-@settings(max_examples=60, deadline=None)
-def test_flow_in_contained_in_facets(data):
-    """Appendix B: every flow-in point of T lies in a facet of its own tile."""
-    d = data.draw(st.integers(min_value=1, max_value=3), label="d")
-    deps = data.draw(dep_patterns(d), label="deps")
-    w = facet_widths(deps)
-    tiles = tuple(
-        data.draw(st.integers(min_value=max(1, w[a]), max_value=4), label=f"t{a}")
-        for a in range(d)
-    )
-    nt = tuple(data.draw(st.integers(min_value=1, max_value=3), label=f"n{a}") for a in range(d))
-    space = IterSpace(tuple(t * n for t, n in zip(tiles, nt)))
-    tiling = Tiling(tiles)
-    specs = build_facet_specs(space, deps, tiling)
-    tile = tuple(min(1, n - 1) for n in nt)
-    fin = flow_in_points(space, deps, tiling, tile)
-    for y in fin:
-        assert any(spec.domain_mask(y[None, :])[0] for spec in specs.values()), (
-            f"flow-in point {y} not covered by any facet (deps={deps.vectors})"
-        )
-
-
-@given(st.data())
-@settings(max_examples=30, deadline=None)
-def test_host_assignment_total_and_valid(data):
-    d = 3
-    deps = data.draw(dep_patterns(d), label="deps")
-    w = facet_widths(deps)
-    tiles = tuple(max(2, wa + 1) for wa in w)
-    space = IterSpace(tuple(t * 3 for t in tiles))
-    tiling = Tiling(tiles)
-    specs = build_facet_specs(space, deps, tiling)
-    tile = (1, 1, 1)
-    fin = flow_in_points(space, deps, tiling, tile)
-    hosts = _assign_hosts(fin, tile, tiling, w, specs)
-    assigned = sum(len(v) for v in hosts.values())
-    assert assigned == len(fin)
-    for k, idx in hosts.items():
-        if idx.size:
-            assert bool(specs[k].domain_mask(fin[idx]).all())
 
 
 # ---------------------------------------------------------------------------

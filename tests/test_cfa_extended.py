@@ -1,8 +1,11 @@
 """Extended CFA coverage: 1-D/2-D/4-D spaces, §J (non-mergeable k-th-level
-neighbours), bandwidth model properties, and analyzer sanity."""
+neighbours), bandwidth model properties, and analyzer sanity.
+
+(The hypothesis-based property tests live in ``test_cfa_properties.py`` so
+this module collects without the optional ``hypothesis`` extra.)
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cfa import (
     AXI_ZC706,
@@ -57,38 +60,10 @@ def test_bandwidth_monotonic_in_burst_length():
     assert long_ < short
 
 
-@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64))
-@settings(max_examples=50, deadline=None)
-def test_bandwidth_report_bounded_by_peak(runs):
-    from repro.core.cfa.plans import TransferPlan
-
-    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
-    rep = BandwidthReport.evaluate(plan, AXI_ZC706)
-    assert 0 < rep.peak_fraction_raw <= 1.0
-    assert rep.peak_fraction_effective <= rep.peak_fraction_raw + 1e-12
-
-
 def test_count_runs_exact():
     assert count_runs(np.array([5, 6, 7, 10, 11, 20])) == (3, 2, 1)
     assert count_runs(np.array([], dtype=np.int64)) == ()
     assert count_runs(np.array([3, 3, 4])) == (2,)  # dedup
-
-
-@given(
-    w=st.integers(1, 3),
-    t=st.integers(3, 6),
-)
-@settings(max_examples=20, deadline=None)
-def test_write_always_single_burst_per_facet(w, t):
-    """The paper's stance: ALL writes are bursts — any dep pattern, any tile."""
-    if w > t:
-        return
-    deps = Deps(((-w, 0, 0), (0, -w, 0), (0, 0, -w)))
-    space = IterSpace((3 * t, 3 * t, 3 * t))
-    tiling = Tiling((t, t, t))
-    plan = cfa_plan(space, deps, tiling, (1, 1, 1))
-    assert plan.n_write_bursts == 3
-    assert all(r > 0 for r in plan.write_runs)
 
 
 def test_flow_in_boundary_tiles_partial_facets():

@@ -1,9 +1,13 @@
-"""End-to-end CFA pipeline: tiled sweep through facet storage == oracle."""
+"""End-to-end CFA pipeline: tiled sweep through facet storage == oracle.
+
+(The hypothesis-based pack/unpack round-trip property lives in
+``test_cfa_properties.py`` so this module collects without the optional
+``hypothesis`` extra.)
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.cfa import (
     CFAPipeline,
@@ -15,36 +19,6 @@ from repro.core.cfa import (
     pack_facet,
     unpack_into,
 )
-
-
-
-# ---------------------------------------------------------------------------
-# pack/unpack round trip
-# ---------------------------------------------------------------------------
-
-@given(
-    nt=st.tuples(*[st.integers(1, 3)] * 3),
-    seed=st.integers(0, 2**31 - 1),
-)
-@settings(max_examples=20, deadline=None)
-def test_pack_unpack_roundtrip(nt, seed):
-    prog = get_program("jacobi2d5p")  # w = (1, 2, 2)
-    t = (2, 4, 4)  # w | t on every axis
-    space = IterSpace(tuple(n * x for n, x in zip(nt, t)))
-    tiling = Tiling(t)
-    specs = build_facet_specs(space, prog.deps, tiling)
-    rng = np.random.default_rng(seed)
-    V = jnp.asarray(rng.normal(size=space.sizes))
-    facets = pack_all(V, specs)
-    # unpack into a fresh volume: facet-domain points must match V exactly
-    out = jnp.full(space.sizes, jnp.nan)
-    for k, spec in specs.items():
-        out = unpack_into(out, facets[k], spec)
-        assert facets[k].shape == spec.shape
-    mask = ~jnp.isnan(out)
-    assert bool(mask.any())
-    np.testing.assert_array_equal(np.asarray(out)[np.asarray(mask)],
-                                  np.asarray(V)[np.asarray(mask)])
 
 
 def test_pack_rejects_non_dividing_width():

@@ -1,0 +1,137 @@
+"""Property tests for the CFA core (the appendix coverage proofs).
+
+Requires the optional ``hypothesis`` test extra (``pip install .[test]``);
+the whole module is skipped when it is absent so tier-1 collection never
+breaks on a minimal install.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cfa import (
+    AXI_ZC706,
+    BandwidthReport,
+    Deps,
+    IterSpace,
+    Tiling,
+    build_facet_specs,
+    cfa_plan,
+    facet_widths,
+    flow_in_points,
+)
+from repro.core.cfa.plans import TransferPlan, _assign_hosts
+
+dep_component = st.integers(min_value=-2, max_value=0)
+
+
+@st.composite
+def dep_patterns(draw, d):
+    n = draw(st.integers(min_value=1, max_value=4))
+    vecs = []
+    for _ in range(n):
+        v = tuple(draw(dep_component) for _ in range(d))
+        vecs.append(v)
+    if all(all(c == 0 for c in v) for v in vecs):
+        vecs[0] = tuple(-1 for _ in range(d))
+    return Deps(tuple(vecs))
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_flow_in_contained_in_facets(data):
+    """Appendix B: every flow-in point of T lies in a facet of its own tile."""
+    d = data.draw(st.integers(min_value=1, max_value=3), label="d")
+    deps = data.draw(dep_patterns(d), label="deps")
+    w = facet_widths(deps)
+    tiles = tuple(
+        data.draw(st.integers(min_value=max(1, w[a]), max_value=4), label=f"t{a}")
+        for a in range(d)
+    )
+    nt = tuple(data.draw(st.integers(min_value=1, max_value=3), label=f"n{a}") for a in range(d))
+    space = IterSpace(tuple(t * n for t, n in zip(tiles, nt)))
+    tiling = Tiling(tiles)
+    specs = build_facet_specs(space, deps, tiling)
+    tile = tuple(min(1, n - 1) for n in nt)
+    fin = flow_in_points(space, deps, tiling, tile)
+    for y in fin:
+        assert any(spec.domain_mask(y[None, :])[0] for spec in specs.values()), (
+            f"flow-in point {y} not covered by any facet (deps={deps.vectors})"
+        )
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_host_assignment_total_and_valid(data):
+    d = 3
+    deps = data.draw(dep_patterns(d), label="deps")
+    w = facet_widths(deps)
+    tiles = tuple(max(2, wa + 1) for wa in w)
+    space = IterSpace(tuple(t * 3 for t in tiles))
+    tiling = Tiling(tiles)
+    specs = build_facet_specs(space, deps, tiling)
+    tile = (1, 1, 1)
+    fin = flow_in_points(space, deps, tiling, tile)
+    hosts = _assign_hosts(fin, tile, tiling, w, specs)
+    assigned = sum(len(v) for v in hosts.values())
+    assert assigned == len(fin)
+    for k, idx in hosts.items():
+        if idx.size:
+            assert bool(specs[k].domain_mask(fin[idx]).all())
+
+
+@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_bandwidth_report_bounded_by_peak(runs):
+    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
+    rep = BandwidthReport.evaluate(plan, AXI_ZC706)
+    assert 0 < rep.peak_fraction_raw <= 1.0
+    assert rep.peak_fraction_effective <= rep.peak_fraction_raw + 1e-12
+
+
+@given(
+    w=st.integers(1, 3),
+    t=st.integers(3, 6),
+)
+@settings(max_examples=20, deadline=None)
+def test_write_always_single_burst_per_facet(w, t):
+    """The paper's stance: ALL writes are bursts — any dep pattern, any tile."""
+    if w > t:
+        return
+    deps = Deps(((-w, 0, 0), (0, -w, 0), (0, 0, -w)))
+    space = IterSpace((3 * t, 3 * t, 3 * t))
+    tiling = Tiling((t, t, t))
+    plan = cfa_plan(space, deps, tiling, (1, 1, 1))
+    assert plan.n_write_bursts == 3
+    assert all(r > 0 for r in plan.write_runs)
+
+
+@given(
+    nt=st.tuples(*[st.integers(1, 3)] * 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_roundtrip(nt, seed):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cfa import get_program, pack_all, unpack_into
+
+    prog = get_program("jacobi2d5p")  # w = (1, 2, 2)
+    t = (2, 4, 4)  # w | t on every axis
+    space = IterSpace(tuple(n * x for n, x in zip(nt, t)))
+    tiling = Tiling(t)
+    specs = build_facet_specs(space, prog.deps, tiling)
+    rng = np.random.default_rng(seed)
+    V = jnp.asarray(rng.normal(size=space.sizes))
+    facets = pack_all(V, specs)
+    # unpack into a fresh volume: facet-domain points must match V exactly
+    out = jnp.full(space.sizes, jnp.nan)
+    for k, spec in specs.items():
+        out = unpack_into(out, facets[k], spec)
+        assert facets[k].shape == spec.shape
+    mask = ~jnp.isnan(out)
+    assert bool(mask.any())
+    np.testing.assert_array_equal(np.asarray(out)[np.asarray(mask)],
+                                  np.asarray(V)[np.asarray(mask)])

@@ -1,7 +1,12 @@
 """Distributed features: sharding rules, compression, pipeline parallelism.
 
 Multi-device behaviour is verified in subprocesses with forced host devices
-(the main test process must keep the single real CPU device)."""
+(the main test process must keep the single real CPU device).
+
+(The hypothesis-based property tests live in
+``test_distributed_properties.py`` so this module collects without the
+optional ``hypothesis`` extra.)
+"""
 import os
 import subprocess
 import sys
@@ -12,7 +17,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (dequantize_int8, ef_compress,
                                            ef_init, quantize_int8)
@@ -41,38 +45,9 @@ def test_sanitize_drops_non_dividing_axes():
     assert sanitize_spec(P(None, "model"), (3, 48), mesh) == P(None, "model")
 
 
-@given(
-    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
-    axes=st.lists(st.sampled_from([None, "data", "model", ("pod", "data")]),
-                  min_size=1, max_size=4),
-)
-@settings(max_examples=100, deadline=None)
-def test_sanitize_never_produces_invalid_spec(dims, axes):
-    mesh = _FakeMesh({"data": 4, "model": 2})
-    spec = sanitize_spec(P(*axes[: len(dims)]), tuple(dims), mesh)
-    for size, ax in zip(dims, list(spec)):
-        if ax is None:
-            continue
-        n = 1
-        for a in (ax if isinstance(ax, tuple) else (ax,)):
-            assert a in mesh.shape
-            n *= mesh.shape[a]
-        assert size % n == 0
-
-
 # ---------------------------------------------------------------------------
 # gradient compression
 # ---------------------------------------------------------------------------
-
-@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
-@settings(max_examples=40, deadline=None)
-def test_int8_quantization_error_bound(seed, scale):
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
-    q, s = quantize_int8(x)
-    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
-    assert err.max() <= float(s) / 2 + 1e-6  # half-ulp rounding bound
-
 
 def test_error_feedback_recovers_gradient_sum():
     """Sum of compressed grads -> sum of true grads (EF property)."""

@@ -1,0 +1,50 @@
+"""Property tests for the distributed features (sharding sanitiser, int8
+gradient compression).
+
+Requires the optional ``hypothesis`` test extra; the module is skipped when
+it is absent so tier-1 collection never breaks on a minimal install.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.distributed.sharding import P, sanitize_spec
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    axes=st.lists(st.sampled_from([None, "data", "model", ("pod", "data")]),
+                  min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_sanitize_never_produces_invalid_spec(dims, axes):
+    mesh = _FakeMesh({"data": 4, "model": 2})
+    spec = sanitize_spec(P(*axes[: len(dims)]), tuple(dims), mesh)
+    for size, ax in zip(dims, list(spec)):
+        if ax is None:
+            continue
+        n = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            assert a in mesh.shape
+            n *= mesh.shape[a]
+        assert size % n == 0
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+@settings(max_examples=40, deadline=None)
+def test_int8_quantization_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6  # half-ulp rounding bound
