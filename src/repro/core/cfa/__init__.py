@@ -40,10 +40,20 @@ Burst plans (``plans``)
     * ``interior_tile``        — the representative steady-state tile (§V-C).
 
 Bandwidth model (``bandwidth``)
-    * ``BurstModel``      — ``time = sum(T_setup + bytes/BW)`` per burst (§II-E).
+    * ``BurstModel``      — ``time = sum(T_setup + bytes/BW)`` per burst (§II-E);
+      ``BurstModel.time`` of a ``PortedPlan`` is the max over per-port
+      schedules (ports run concurrently, §VII).
+    * ``PortedPlan``      — a plan's bursts repartitioned over n ports (§VII).
     * ``BandwidthReport`` — raw/effective bandwidth of a plan (Fig. 15 axes).
     * ``AXI_ZC706``       — the paper's ZC706 AXI HP port model (§VI-A).
     * ``TPU_V5E_HBM``     — the TPU DMA adaptation target (§VI-A analogue).
+
+Multi-port repartition (``multiport``) — §VII future work made executable
+    * ``PortAssignment`` / ``assign_ports`` — LPT placement of whole facet
+      arrays on ports (balance = max/mean port load).
+    * ``repartition`` / ``best_repartition`` / ``PORT_STRATEGIES`` — facet-
+      and burst-granular splits of a ``TransferPlan`` into a ``PortedPlan``.
+    * ``port_speedup`` — modeled multi-port gain on the interior-tile plan.
 
 Benchmarks (``programs``)
     * ``StencilProgram`` — a Table I benchmark in post-skew normal form (§IV-E).
@@ -55,9 +65,11 @@ Pipeline (``transform``)
 
 Autotuner (``autotune``) — the §VI "which layout?" question made a subsystem
     * ``autotune``         — staged search over tilings x extension dirs x
-      contiguity levels, scored by ``BurstModel``, with an on-disk cache.
+      contiguity levels x port repartitions (``n_ports``), scored by
+      ``BurstModel``, with an on-disk cache.
     * ``LayoutCandidate`` / ``ScoredLayout`` / ``LayoutDecision`` — the search
-      space, the per-candidate score, and the ranked result.
+      space, the per-candidate score, and the ranked result (which carries
+      the winning ``PortAssignment`` when ``n_ports > 1``).
     * ``candidate_tilings`` / ``hand_coded_baselines`` — enumeration helpers.
 """
 from .spaces import (
@@ -86,7 +98,15 @@ from .plans import (
     data_tiling_plan,
     interior_tile,
 )
-from .bandwidth import BurstModel, BandwidthReport, AXI_ZC706, TPU_V5E_HBM
+from .bandwidth import BurstModel, PortedPlan, BandwidthReport, AXI_ZC706, TPU_V5E_HBM
+from .multiport import (
+    PortAssignment,
+    PORT_STRATEGIES,
+    assign_ports,
+    repartition,
+    best_repartition,
+    port_speedup,
+)
 from .programs import StencilProgram, PROGRAMS, get_program
 from .autotune import (
     LayoutCandidate,
@@ -105,7 +125,9 @@ __all__ = [
     "pack_facet", "pack_all", "unpack_into",
     "TransferPlan", "count_runs", "cfa_plan", "original_layout_plan",
     "bounding_box_plan", "data_tiling_plan", "interior_tile",
-    "BurstModel", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
+    "BurstModel", "PortedPlan", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
+    "PortAssignment", "PORT_STRATEGIES", "assign_ports",
+    "repartition", "best_repartition", "port_speedup",
     "StencilProgram", "PROGRAMS", "get_program",
     "LayoutCandidate", "ScoredLayout", "LayoutDecision",
     "autotune", "candidate_tilings", "hand_coded_baselines",

@@ -8,11 +8,14 @@ follow-up (Ferry et al., 2024) both show the real bandwidth wins come from
 
     given   a StencilProgram, an IterSpace and a BurstModel,
     explore  candidate Tilings x extension-direction assignments x
-             contiguity levels (full-tile / inter-tile / intra-tile, §IV-G/H/I),
+             contiguity levels (full-tile / inter-tile / intra-tile, §IV-G/H/I)
+             x port repartitions (``n_ports > 1``, §VII future work),
              plus the paper's three baselines as hand-coded seeds,
     score    each candidate's interior-tile TransferPlan under the BurstModel
-             (modeled effective bandwidth = useful bytes / modeled time),
-    return   a ranked LayoutDecision.
+             (modeled effective bandwidth = useful bytes / modeled time; with
+             ``n_ports > 1`` the time is the slowest port's after the best
+             ``multiport`` repartition, so layout and repartition co-tune),
+    return   a ranked LayoutDecision (carrying the winning port assignment).
 
 The hand-coded plans (``cfa_plan`` at the program's default tile,
 ``original_layout_plan``, ``bounding_box_plan``, ``data_tiling_plan``) are
@@ -36,8 +39,9 @@ from typing import Sequence
 
 import numpy as np
 
-from .bandwidth import AXI_ZC706, BandwidthReport, BurstModel
+from .bandwidth import AXI_ZC706, BandwidthReport, BurstModel, PortedPlan
 from .facets import CONTIGUITY_LEVELS, extension_dir
+from .multiport import PORT_STRATEGIES, PortAssignment, best_repartition
 from .plans import (
     TransferPlan,
     bounding_box_plan,
@@ -60,7 +64,9 @@ __all__ = [
     "clear_cache",
 ]
 
-_CACHE_VERSION = 1
+# v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
+# and the decision-level n_ports; v1 caches are rejected and re-searched.
+_CACHE_VERSION = 2
 
 
 # --------------------------------------------------------------------------
@@ -129,7 +135,20 @@ class LayoutCandidate:
 
 @dataclasses.dataclass(frozen=True)
 class ScoredLayout:
-    """A candidate plus its BurstModel score (per interior tile)."""
+    """A candidate plus its BurstModel score (per interior tile).
+
+    With ``n_ports > 1`` the *time and bandwidth* figures describe the
+    candidate after its best port repartition: ``time_s`` is the slowest
+    port's time (ports run concurrently), ``raw_bw``/``effective_bw`` are
+    aggregate across ports, and ``port_strategy``/``port_assignment``/
+    ``port_balance``/``port_speedup_vs_single`` record how the repartition
+    was realised (assignment is ``None`` for burst-granular strategies,
+    which split below facet granularity).  The *layout* figures —
+    ``n_read_bursts``/``n_write_bursts``/``transferred``/``useful``/
+    ``redundancy`` — always describe the underlying single-port plan (a
+    ``stripe`` split issues more, shorter bursts; that cost is reflected in
+    ``time_s``, not re-counted here).
+    """
 
     candidate: LayoutCandidate
     n_read_bursts: int
@@ -141,6 +160,11 @@ class ScoredLayout:
     raw_bw: float
     effective_bw: float  # useful bytes / modeled time — the ranking metric
     peak_fraction_effective: float
+    n_ports: int = 1
+    port_strategy: str | None = None
+    port_assignment: tuple[tuple[int, int], ...] | None = None  # facet -> port
+    port_balance: float | None = None
+    port_speedup_vs_single: float | None = None
 
     @property
     def n_bursts(self) -> int:
@@ -148,10 +172,28 @@ class ScoredLayout:
 
     @staticmethod
     def from_plan(
-        candidate: LayoutCandidate, plan: TransferPlan, model: BurstModel
+        candidate: LayoutCandidate,
+        plan: TransferPlan,
+        model: BurstModel,
+        *,
+        n_ports: int = 1,
+        port_strategies: Sequence[str] = PORT_STRATEGIES,
     ) -> "ScoredLayout":
-        rep = BandwidthReport.evaluate(plan, model)
-        t = model.time_s(plan.read_runs) + model.time_s(plan.write_runs)
+        t = t_single = model.time(plan)
+        ports: dict = {}
+        scored_plan: TransferPlan | PortedPlan = plan
+        if n_ports > 1:
+            pp = best_repartition(plan, n_ports, model, port_strategies)
+            t = model.time(pp)
+            scored_plan = pp
+            ports = dict(
+                n_ports=n_ports,
+                port_strategy=pp.strategy,
+                port_assignment=pp.facet_to_port,
+                port_balance=pp.balance,
+                port_speedup_vs_single=t_single / t if t else 1.0,
+            )
+        rep = BandwidthReport.evaluate(scored_plan, model)
         return ScoredLayout(
             candidate=candidate,
             n_read_bursts=plan.n_read_bursts,
@@ -163,6 +205,7 @@ class ScoredLayout:
             raw_bw=rep.raw_bw,
             effective_bw=rep.effective_bw,
             peak_fraction_effective=rep.peak_fraction_effective,
+            **ports,
         )
 
 
@@ -188,11 +231,41 @@ class LayoutDecision:
     budget: int
     evaluated: int
     ranked: tuple[ScoredLayout, ...]  # best first
+    n_ports: int = 1
     from_cache: bool = dataclasses.field(default=False, compare=False)
 
     @property
     def best(self) -> ScoredLayout:
         return self.ranked[0]
+
+    @property
+    def port_assignment(self) -> PortAssignment | None:
+        """The winning CFA candidate's facet->port repartition, if any.
+
+        ``None`` for single-port decisions and for winners whose best
+        repartition is burst-granular (``stripe`` / ``burst-lpt`` split below
+        the facet, so there is no whole-facet assignment to report).
+        """
+        try:
+            s = self.best_cfa()
+        except LookupError:
+            return None
+        if s.n_ports <= 1 or s.port_assignment is None:
+            return None
+        from .programs import get_program
+
+        plan = s.candidate.plan(IterSpace(self.space), get_program(self.program))
+        f2p = dict(s.port_assignment)
+        loads = [0.0] * s.n_ports
+        for length, k in zip(plan.read_runs, plan.read_run_hosts or ()):
+            loads[f2p[k]] += length
+        for length, k in zip(plan.write_runs, plan.write_run_hosts or ()):
+            loads[f2p[k]] += length
+        return PortAssignment(
+            n_ports=s.n_ports,
+            facet_to_port=f2p,
+            port_bytes=tuple(loads),
+        )
 
     def best_cfa(self, *, kernel_compatible: bool = False) -> ScoredLayout:
         """Best CFA-family candidate (facet storage is what the pipeline and
@@ -244,6 +317,9 @@ class LayoutDecision:
                 contiguity=c["contiguity"],
                 block=tuple(c["block"]) if c["block"] is not None else None,
             )
+            pa = s.get("port_assignment")
+            if pa is not None:
+                s["port_assignment"] = tuple((int(k), int(p)) for k, p in pa)
             ranked.append(ScoredLayout(candidate=cand, **s))
         return LayoutDecision(
             program=d["program"],
@@ -254,6 +330,7 @@ class LayoutDecision:
             budget=d["budget"],
             evaluated=d["evaluated"],
             ranked=tuple(ranked),
+            n_ports=d.get("n_ports", 1),
         )
 
     def summary(self, top: int = 8) -> str:
@@ -261,6 +338,7 @@ class LayoutDecision:
         lines = [
             f"{self.program} @ space {self.space}  model={self.model}  "
             f"seed={self.seed}  evaluated={self.evaluated} candidates"
+            f"{f'  ports={self.n_ports}' if self.n_ports > 1 else ''}"
             f"{'  [cache]' if self.from_cache else ''}",
             f"{'rank':>4} {'eff-bw':>8} {'raw-bw':>8} {'bursts':>6} "
             f"{'redun':>6}  candidate",
@@ -268,9 +346,10 @@ class LayoutDecision:
         for i, s in enumerate(self.ranked[:top]):
             peak = s.effective_bw / s.peak_fraction_effective if s.peak_fraction_effective else 0.0
             raw_frac = s.raw_bw / peak if peak else 0.0
+            port = f"  [{s.port_strategy} x{s.n_ports}]" if s.n_ports > 1 else ""
             lines.append(
                 f"{i:>4} {s.peak_fraction_effective:>7.1%} {raw_frac:>7.1%} "
-                f"{s.n_bursts:>6} {s.redundancy:>6.1%}  {s.candidate.key}"
+                f"{s.n_bursts:>6} {s.redundancy:>6.1%}  {s.candidate.key}{port}"
             )
         return "\n".join(lines)
 
@@ -325,12 +404,18 @@ def hand_coded_baselines(
     space: IterSpace,
     model: BurstModel,
     tile: Sequence[int] | None = None,
+    *,
+    n_ports: int = 1,
+    port_strategies: Sequence[str] = PORT_STRATEGIES,
 ) -> dict[str, ScoredLayout]:
     """The paper's hand-coded plans at one tile size, scored under ``model``.
 
     These are the seeds the autotuner must beat (or match): ``cfa_plan`` with
     the default layout, ``original_layout_plan``, ``bounding_box_plan``, and
-    ``data_tiling_plan`` with the block-size sweep of Fig. 15.
+    ``data_tiling_plan`` with the block-size sweep of Fig. 15.  With
+    ``n_ports > 1`` each baseline is also given its best repartition (the
+    single-array baselines can only use burst-granular strategies), keeping
+    the comparison against multi-port CFA candidates apples-to-apples.
     """
     t = tuple(tile) if tile is not None else program.default_tile
     cands = {
@@ -343,7 +428,10 @@ def hand_coded_baselines(
         cands[f"data-tiling/{div}"] = LayoutCandidate("data-tiling", t, block=blk)
     out = {}
     for name, cand in cands.items():
-        out[name] = ScoredLayout.from_plan(cand, cand.plan(space, program), model)
+        out[name] = ScoredLayout.from_plan(
+            cand, cand.plan(space, program), model,
+            n_ports=n_ports, port_strategies=port_strategies,
+        )
     return out
 
 
@@ -380,6 +468,8 @@ def _cache_key(
     contiguity_levels: Sequence[str],
     max_halo_elems: int | None,
     refine_top: int,
+    n_ports: int,
+    port_strategies: Sequence[str],
 ) -> str:
     blob = json.dumps(
         {
@@ -394,6 +484,8 @@ def _cache_key(
             "contiguity": list(contiguity_levels),
             "max_halo_elems": max_halo_elems,
             "refine_top": refine_top,
+            "n_ports": n_ports,
+            "port_strategies": list(port_strategies),
         },
         sort_keys=True,
     )
@@ -447,6 +539,8 @@ def autotune(
     contiguity_levels: Sequence[str] = CONTIGUITY_LEVELS,
     max_halo_elems: int | None = 64 * 1024,
     refine_top: int = 3,
+    n_ports: int = 1,
+    port_strategies: Sequence[str] = PORT_STRATEGIES,
     cache: bool = True,
     cache_dir: Path | str | None = None,
 ) -> LayoutDecision:
@@ -463,6 +557,13 @@ def autotune(
        levels on the ``refine_top`` best tilings from stage 2, plus a
        data-tiling block sweep on the best tiling.
 
+    With ``n_ports > 1`` every candidate is additionally co-tuned with its
+    best port repartition (``multiport.best_repartition`` over
+    ``port_strategies`` x ports-used), and scores/ranking reflect the
+    multi-port time — the slowest port, ports running concurrently (§VII).
+    The winning facet->port split is carried on each ``ScoredLayout`` and
+    surfaced as ``decision.port_assignment``.
+
     Stages 2 and 3 stay within ``budget`` total evaluations (so
     ``decision.evaluated <= max(budget, number of seeds)``).
 
@@ -477,10 +578,12 @@ def autotune(
             f"space {sp.sizes} has {sp.ndim} dims but program {prog.name!r} "
             f"is {prog.ndim}-D"
         )
+    if n_ports < 1:
+        raise ValueError(f"n_ports must be >= 1: {n_ports}")
     til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
 
     key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
-                     max_halo_elems, refine_top)
+                     max_halo_elems, refine_top, n_ports, port_strategies)
     path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
     if cache:
         hit = _cache_load(path)
@@ -501,7 +604,8 @@ def autotune(
             return None  # illegal candidate (e.g. w > t); skip
         # (AssertionError deliberately propagates: it flags a layout bug,
         # e.g. a non-contiguous facet write, never an illegal candidate.)
-        s = ScoredLayout.from_plan(cand, plan, model)
+        s = ScoredLayout.from_plan(cand, plan, model, n_ports=n_ports,
+                                   port_strategies=port_strategies)
         scored[cand.key] = s
         return s
 
@@ -511,7 +615,9 @@ def autotune(
         for n, t, w in zip(sp.sizes, prog.default_tile, widths)
     )
     if default_tile_ok:
-        for s in hand_coded_baselines(prog, sp, model).values():
+        seeds = hand_coded_baselines(prog, sp, model, n_ports=n_ports,
+                                     port_strategies=port_strategies)
+        for s in seeds.values():
             scored.setdefault(s.candidate.key, s)
 
     # -- stage 2: default layout across tilings ----------------------------
@@ -565,6 +671,7 @@ def autotune(
         budget=budget,
         evaluated=len(scored),
         ranked=tuple(sorted(scored.values(), key=_rank_key)),
+        n_ports=n_ports,
     )
     if cache:
         _cache_store(path, decision)

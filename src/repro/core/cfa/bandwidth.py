@@ -1,4 +1,4 @@
-"""Analytic burst/DMA bandwidth model.
+"""Analytic burst/DMA bandwidth model, single- and multi-port.
 
 The paper measures raw and effective bandwidth on a Zynq ZC706 (64-bit AXI HP
 port @ 100 MHz -> 800 MB/s peak).  This container has no FPGA and no TPU, so
@@ -10,6 +10,17 @@ A burst of length L amortises the fixed per-transaction cost T_setup over L
 elements; element-wise access pays it per element.  This is exactly the
 latency structure described in §II-E, and is the reason CFA's few-long-bursts
 plans approach 100 % of the bus bandwidth in Fig. 15.
+
+**Multi-port extension (paper §VII future work).**  A :class:`PortedPlan`
+carries the same burst schedule split over ``n_ports`` independent memory
+ports (HBM channels / AXI HP ports).  Ports run concurrently, so
+
+    time(ported plan) = max over ports ( time of that port's bursts )
+
+— the balance objective of §VII ("one has to find an adequate repartition of
+data over each memory port to balance accesses").  The repartition strategies
+that produce a :class:`PortedPlan` from a :class:`TransferPlan` live in
+``repro.core.cfa.multiport``.
 
 Two presets:
 
@@ -23,7 +34,77 @@ import dataclasses
 
 from .plans import TransferPlan
 
-__all__ = ["BurstModel", "AXI_ZC706", "TPU_V5E_HBM", "BandwidthReport"]
+__all__ = [
+    "BurstModel",
+    "PortedPlan",
+    "AXI_ZC706",
+    "TPU_V5E_HBM",
+    "BandwidthReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PortedPlan:
+    """A tile's burst schedule repartitioned over ``n_ports`` memory ports.
+
+    ``read_runs_by_port[p]`` / ``write_runs_by_port[p]`` are the burst lengths
+    (elements) served by port ``p``; a port may be empty (a repartition is
+    allowed to leave ports idle — see ``multiport.best_repartition``).
+    ``facet_to_port`` records the facet-granular assignment when the strategy
+    preserved facet arrays whole (``None`` for burst-granular strategies).
+    """
+
+    scheme: str
+    n_ports: int
+    strategy: str
+    read_runs_by_port: tuple[tuple[int, ...], ...]
+    write_runs_by_port: tuple[tuple[int, ...], ...]
+    read_useful: int
+    write_useful: int
+    facet_to_port: tuple[tuple[int, int], ...] | None = None
+
+    def __post_init__(self) -> None:
+        if len(self.read_runs_by_port) != self.n_ports:
+            raise ValueError("read_runs_by_port must have n_ports entries")
+        if len(self.write_runs_by_port) != self.n_ports:
+            raise ValueError("write_runs_by_port must have n_ports entries")
+
+    @property
+    def port_elems(self) -> tuple[int, ...]:
+        """Elements moved per port (the repartition's load vector)."""
+        return tuple(
+            int(sum(rr) + sum(wr))
+            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port)
+        )
+
+    @property
+    def transferred(self) -> int:
+        return int(sum(self.port_elems))
+
+    @property
+    def useful(self) -> int:
+        return self.read_useful + self.write_useful
+
+    @property
+    def redundancy(self) -> float:
+        return 0.0 if not self.transferred else 1.0 - self.useful / self.transferred
+
+    @property
+    def n_bursts(self) -> int:
+        return sum(
+            len(rr) + len(wr)
+            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port)
+        )
+
+    @property
+    def balance(self) -> float:
+        """max load / mean load over the ports that carry traffic (1.0 =
+        perfectly balanced).  Idle ports are a legal repartition choice
+        (``best_repartition`` may use fewer ports than available), so they
+        do not count against the balance of the ports actually used."""
+        loads = [l for l in self.port_elems if l > 0]
+        mean = sum(loads) / len(loads) if loads else 0.0
+        return float(max(loads) / mean) if mean > 0 else 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +118,26 @@ class BurstModel:
         return sum(
             self.setup_s + (r * self.elem_bytes) / self.peak_bytes_per_s for r in runs
         )
+
+    def time(self, plan: "TransferPlan | PortedPlan") -> float:
+        """Modeled transfer time of a whole plan.
+
+        Single-port :class:`TransferPlan`: sum over all bursts.  Multi-port
+        :class:`PortedPlan`: ports transfer concurrently, so the tile waits
+        for the slowest port — the max over per-port burst schedules (§VII).
+        """
+        if isinstance(plan, PortedPlan):
+            return max(
+                self.time_s(rr) + self.time_s(wr)
+                for rr, wr in zip(plan.read_runs_by_port, plan.write_runs_by_port)
+            )
+        return self.time_s(plan.read_runs) + self.time_s(plan.write_runs)
+
+    @property
+    def setup_elems(self) -> float:
+        """T_setup expressed in element-transfer time units (the burst-length
+        "knee": runs much longer than this amortise the setup away)."""
+        return self.setup_s * self.peak_bytes_per_s / self.elem_bytes
 
 
 # The paper's AXI HP port: 64-bit @ 100 MHz = 800 MB/s; a non-burst access
@@ -63,10 +164,20 @@ class BandwidthReport:
     peak_fraction_effective: float
     n_bursts: int
     redundancy: float
+    n_ports: int = 1
 
     @staticmethod
-    def evaluate(plan: TransferPlan, model: BurstModel) -> "BandwidthReport":
-        t = model.time_s(plan.read_runs) + model.time_s(plan.write_runs)
+    def evaluate(
+        plan: "TransferPlan | PortedPlan", model: BurstModel
+    ) -> "BandwidthReport":
+        """Bandwidth of a plan under ``model``.
+
+        For a :class:`PortedPlan` the time is the slowest port's (ports run
+        concurrently), so raw/effective bandwidth are *aggregate* across
+        ports and ``peak_fraction_*`` is relative to a single port's peak —
+        an n-port plan can exceed 1.0, which is the point of §VII.
+        """
+        t = model.time(plan)
         raw = plan.transferred * model.elem_bytes / t if t else 0.0
         eff = plan.useful * model.elem_bytes / t if t else 0.0
         return BandwidthReport(
@@ -78,4 +189,5 @@ class BandwidthReport:
             peak_fraction_effective=eff / model.peak_bytes_per_s,
             n_bursts=plan.n_bursts,
             redundancy=plan.redundancy,
+            n_ports=getattr(plan, "n_ports", 1),
         )

@@ -1,4 +1,4 @@
-"""Multi-port facet distribution — the paper's stated future work (§VII):
+"""Multi-port facet repartition — the paper's stated future work (§VII):
 
     "the machine model we have considered may be extended to multi-port
      memory accesses, such as high-bandwidth memory ... one has to find an
@@ -8,12 +8,27 @@ On TPU-class HBM the analogue is distributing the facet arrays across HBM
 channels (or, across chips, the sharding of facet arrays over a mesh axis).
 Because CFA gives every facet a *static, per-tile-uniform* transfer size,
 the balance problem is a deterministic multiprocessor-scheduling instance:
-assign facet arrays (the unit of contiguity) to ports so the heaviest port
-carries the least possible bytes per tile.
+assign work units to ports so the heaviest port carries the least possible
+time per tile (``BurstModel.time`` of a ``PortedPlan`` = max over ports).
 
-``assign_ports`` implements LPT (longest-processing-time greedy, 4/3-optimal)
-over per-tile facet traffic derived from the burst plans; ``port_speedup``
-evaluates the resulting aggregate-bandwidth gain under the burst model.
+Two granularities of "work unit" are searched:
+
+* **facet-granular** — whole facet arrays go to ports, preserving each
+  facet's contiguity untouched.  ``facet-lpt`` is LPT (longest-processing-
+  time greedy, 4/3-optimal) over per-facet burst time; ``facet-rr`` is the
+  round-robin baseline.  Requires the plan's run->facet attribution
+  (``TransferPlan.read_run_hosts``), i.e. a CFA plan.
+* **burst-granular** — individual bursts are schedulable: ``burst-lpt``
+  LPT-schedules whole bursts across ports; ``stripe`` splits every burst
+  into near-equal contiguous chunks, one per port (address interleaving
+  across channels, each chunk paying its own descriptor setup).  These work
+  for any layout scheme, including the paper's baselines.
+
+``best_repartition`` searches strategies x ports-used (a repartition may
+leave ports idle, so more available ports never models slower) and returns
+the fastest :class:`PortedPlan` under the burst model.  ``assign_ports`` /
+``port_speedup`` are the facet-level entry points used by the autotuner,
+the sharded wavefront executor and the multiport benchmark.
 """
 from __future__ import annotations
 
@@ -22,12 +37,21 @@ from typing import Sequence
 
 import numpy as np
 
-from .bandwidth import BurstModel
+from .bandwidth import BurstModel, PortedPlan
 from .facets import build_facet_specs
-from .plans import cfa_plan, interior_tile
+from .plans import TransferPlan, cfa_plan, interior_tile
 from .spaces import Deps, IterSpace, Tiling
 
-__all__ = ["PortAssignment", "assign_ports", "port_speedup"]
+__all__ = [
+    "PortAssignment",
+    "PORT_STRATEGIES",
+    "assign_ports",
+    "repartition",
+    "best_repartition",
+    "port_speedup",
+]
+
+PORT_STRATEGIES = ("facet-lpt", "facet-rr", "burst-lpt", "stripe")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +88,7 @@ def _facet_traffic(space: IterSpace, deps: Deps, tiling: Tiling) -> dict[int, fl
 
 def assign_ports(space: IterSpace, deps: Deps, tiling: Tiling,
                  n_ports: int) -> PortAssignment:
+    """LPT assignment of whole facet arrays to ``n_ports`` ports."""
     traffic = _facet_traffic(space, deps, tiling)
     loads = [0.0] * n_ports
     assign = {}
@@ -74,52 +99,209 @@ def assign_ports(space: IterSpace, deps: Deps, tiling: Tiling,
     return PortAssignment(n_ports, assign, tuple(loads))
 
 
-def port_speedup(space: IterSpace, deps: Deps, tiling: Tiling,
-                 n_ports: int, model: BurstModel) -> dict:
-    """Aggregate-bandwidth gain of an n-port split vs a single port.
+# --------------------------------------------------------------------------
+# Repartition strategies: TransferPlan -> PortedPlan
+# --------------------------------------------------------------------------
 
-    Each port serves its facets' bursts independently; tile time = the
-    slowest port (ports run concurrently, the paper's balance objective)."""
-    plan = cfa_plan(space, deps, tiling)
-    t_single = model.time_s(plan.read_runs) + model.time_s(plan.write_runs)
 
-    pa = assign_ports(space, deps, tiling, n_ports)
-    specs = build_facet_specs(space, deps, tiling)
-    # apportion the plan's runs to ports: writes are per facet (one each, in
-    # ascending facet order by construction); reads via the host assignment.
-    write_runs_by_port = [[] for _ in range(n_ports)]
-    for k, run in zip(sorted(specs), plan.write_runs):
-        write_runs_by_port[pa.facet_to_port[k]].append(run)
-    # reads: split proportionally to per-facet read traffic
-    from .plans import _assign_hosts, flow_in_points
-    from .spaces import facet_widths
+def _run_weight(length: int, model: BurstModel | None) -> float:
+    """Scheduling weight of one burst: its modeled time (or elements)."""
+    if model is None:
+        return float(length)
+    return model.setup_s + length * model.elem_bytes / model.peak_bytes_per_s
 
-    tile = interior_tile(space, tiling)
-    hosts = _assign_hosts(flow_in_points(space, deps, tiling, tile), tile,
-                          tiling, facet_widths(deps), specs)
-    read_runs_by_port = [[] for _ in range(n_ports)]
-    runs = list(plan.read_runs)
-    # plan.read_runs were emitted per-facet in specs order inside cfa_plan
-    idx = 0
-    for k in specs:
-        n_k = 1 if hosts[k].size else 0
-        # boxed mode merges each facet's reads into ~1 burst; attribute
-        # remaining runs round-robin if counts diverge
-        take = runs[idx: idx + max(n_k, 0)]
-        idx += len(take)
-        read_runs_by_port[pa.facet_to_port[k]].extend(take)
-    for r in runs[idx:]:
-        read_runs_by_port[int(np.argmin([sum(x) for x in read_runs_by_port]))].append(r)
 
-    t_ports = max(
-        model.time_s(tuple(wr)) + model.time_s(tuple(rr))
-        for wr, rr in zip(write_runs_by_port, read_runs_by_port)
+def _facet_partition(plan: TransferPlan, n_ports: int, *, lpt: bool,
+                     model: BurstModel | None):
+    """Group runs by host facet, place whole facets on ports (LPT or RR)."""
+    if plan.read_run_hosts is None or plan.write_run_hosts is None:
+        raise ValueError(
+            f"facet-granular repartition needs run->facet attribution, which "
+            f"{plan.scheme!r} plans do not carry (use a burst-granular strategy)"
+        )
+    groups: dict[int, tuple[list[int], list[int]]] = {}
+    for length, k in zip(plan.read_runs, plan.read_run_hosts):
+        groups.setdefault(k, ([], []))[0].append(length)
+    for length, k in zip(plan.write_runs, plan.write_run_hosts):
+        groups.setdefault(k, ([], []))[1].append(length)
+    weight = {
+        k: sum(_run_weight(r, model) for r in rr + wr)
+        for k, (rr, wr) in groups.items()
+    }
+    reads = [[] for _ in range(n_ports)]
+    writes = [[] for _ in range(n_ports)]
+    loads = [0.0] * n_ports
+    assign: dict[int, int] = {}
+    if lpt:
+        order = sorted(groups, key=lambda k: (-weight[k], k))
+    else:  # round-robin in canonical facet-axis order
+        order = sorted(groups)
+    for i, k in enumerate(order):
+        p = int(np.argmin(loads)) if lpt else i % n_ports
+        assign[k] = p
+        loads[p] += weight[k]
+        reads[p].extend(groups[k][0])
+        writes[p].extend(groups[k][1])
+    return reads, writes, assign
+
+
+def _burst_lpt_partition(plan: TransferPlan, n_ports: int,
+                         model: BurstModel | None):
+    """LPT over individual bursts (reads and writes jointly scheduled)."""
+    runs = [(length, True) for length in plan.read_runs]
+    runs += [(length, False) for length in plan.write_runs]
+    runs.sort(key=lambda x: -x[0])
+    reads = [[] for _ in range(n_ports)]
+    writes = [[] for _ in range(n_ports)]
+    loads = [0.0] * n_ports
+    for length, is_read in runs:
+        p = int(np.argmin(loads))
+        loads[p] += _run_weight(length, model)
+        (reads if is_read else writes)[p].append(length)
+    return reads, writes
+
+
+def _stripe_partition(plan: TransferPlan, n_ports: int):
+    """Split every burst into ``n_ports`` near-equal contiguous chunks.
+
+    Models address-interleaving each extent across channels: chunk ``p`` of
+    a burst goes to port ``p`` and pays its own descriptor setup, so striping
+    wins exactly when bursts are long relative to the model's setup knee."""
+    reads = [[] for _ in range(n_ports)]
+    writes = [[] for _ in range(n_ports)]
+    for length in plan.read_runs:
+        base, rem = divmod(length, n_ports)
+        for p in range(n_ports):
+            chunk = base + (1 if p < rem else 0)
+            if chunk:
+                reads[p].append(chunk)
+    for length in plan.write_runs:
+        base, rem = divmod(length, n_ports)
+        for p in range(n_ports):
+            chunk = base + (1 if p < rem else 0)
+            if chunk:
+                writes[p].append(chunk)
+    return reads, writes
+
+
+def repartition(
+    plan: TransferPlan,
+    n_ports: int,
+    strategy: str = "facet-lpt",
+    *,
+    model: BurstModel | None = None,
+) -> PortedPlan:
+    """Split ``plan``'s bursts over ``n_ports`` ports with one strategy.
+
+    ``model`` weights LPT bin-packing by modeled burst time (setup included);
+    without it, weights are element counts.  Raises ``ValueError`` for a
+    facet-granular strategy on a plan without facet attribution.
+    """
+    if n_ports <= 0:
+        raise ValueError(f"n_ports must be positive: {n_ports}")
+    if strategy not in PORT_STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; have {PORT_STRATEGIES}")
+    assign = None
+    if strategy in ("facet-lpt", "facet-rr"):
+        reads, writes, facet_assign = _facet_partition(
+            plan, n_ports, lpt=(strategy == "facet-lpt"), model=model
+        )
+        assign = tuple(sorted(facet_assign.items()))
+    elif strategy == "burst-lpt":
+        reads, writes = _burst_lpt_partition(plan, n_ports, model)
+    else:  # stripe
+        reads, writes = _stripe_partition(plan, n_ports)
+    return PortedPlan(
+        scheme=plan.scheme,
+        n_ports=n_ports,
+        strategy=strategy,
+        read_runs_by_port=tuple(tuple(r) for r in reads),
+        write_runs_by_port=tuple(tuple(w) for w in writes),
+        read_useful=plan.read_useful,
+        write_useful=plan.write_useful,
+        facet_to_port=assign,
     )
+
+
+def _pad_ports(pp: PortedPlan, n_ports: int) -> PortedPlan:
+    """Re-express a p-port plan as an n-port plan with idle trailing ports."""
+    if pp.n_ports == n_ports:
+        return pp
+    pad = n_ports - pp.n_ports
+    return dataclasses.replace(
+        pp,
+        n_ports=n_ports,
+        read_runs_by_port=pp.read_runs_by_port + ((),) * pad,
+        write_runs_by_port=pp.write_runs_by_port + ((),) * pad,
+    )
+
+
+def best_repartition(
+    plan: TransferPlan,
+    n_ports: int,
+    model: BurstModel,
+    strategies: Sequence[str] = PORT_STRATEGIES,
+) -> PortedPlan:
+    """The fastest repartition of ``plan`` over up to ``n_ports`` ports.
+
+    Searches every strategy at every port count ``p <= n_ports`` (using fewer
+    ports than available is always legal — idle ports cost nothing — which
+    also makes the returned time monotonically non-increasing in ``n_ports``).
+    Deterministic tiebreak: earliest strategy in ``strategies``, then fewest
+    ports used.  Facet-granular strategies are skipped silently for plans
+    without facet attribution; when *no* requested strategy applies (e.g.
+    facet-only strategies on a baseline plan) the trivial single-port
+    schedule — always legal — is returned with strategy ``"single-port"``.
+    """
+    best: PortedPlan | None = None
+    best_key: tuple | None = None
+    for p in range(1, n_ports + 1):
+        for si, strat in enumerate(strategies):
+            try:
+                pp = repartition(plan, p, strat, model=model)
+            except ValueError:
+                continue
+            key = (model.time(pp), si, p)
+            if best_key is None or key < best_key:
+                best, best_key = pp, key
+    if best is None:
+        best = PortedPlan(
+            scheme=plan.scheme,
+            n_ports=1,
+            strategy="single-port",
+            read_runs_by_port=(plan.read_runs,),
+            write_runs_by_port=(plan.write_runs,),
+            read_useful=plan.read_useful,
+            write_useful=plan.write_useful,
+        )
+    return _pad_ports(best, n_ports)
+
+
+def port_speedup(
+    space: IterSpace,
+    deps: Deps,
+    tiling: Tiling,
+    n_ports: int,
+    model: BurstModel,
+    *,
+    strategies: Sequence[str] = PORT_STRATEGIES,
+) -> dict:
+    """Aggregate-bandwidth gain of an n-port repartition vs a single port.
+
+    Evaluates the interior-tile CFA plan, repartitions it with
+    ``best_repartition`` and compares modeled times: each port serves its
+    bursts independently; tile time = the slowest port (ports run
+    concurrently, the paper's §VII balance objective)."""
+    plan = cfa_plan(space, deps, tiling)
+    t_single = model.time(plan)
+    pp = best_repartition(plan, n_ports, model, strategies)
+    t_ports = model.time(pp)
     return {
         "n_ports": n_ports,
-        "balance": pa.balance,
+        "strategy": pp.strategy,
+        "balance": pp.balance,
         "t_single_us": 1e6 * t_single,
         "t_multi_us": 1e6 * t_ports,
         "speedup": t_single / t_ports if t_ports else 1.0,
-        "assignment": pa.facet_to_port,
+        "assignment": dict(pp.facet_to_port) if pp.facet_to_port is not None else None,
     }

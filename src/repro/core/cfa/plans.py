@@ -49,13 +49,28 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class TransferPlan:
-    """Aggregate burst statistics for one tile (reads + writes separable)."""
+    """Aggregate burst statistics for one tile (reads + writes separable).
+
+    ``read_run_hosts`` / ``write_run_hosts`` attribute each run to the facet
+    array (by canonical axis) it is served from — the unit of contiguity a
+    multi-port repartition moves around (``repro.core.cfa.multiport``).  The
+    CFA plans fill them; the single-array baselines leave them ``None``
+    (their runs can still be repartitioned at burst granularity).
+    """
 
     scheme: str
     read_runs: tuple[int, ...]  # lengths (elements) of each read burst
     write_runs: tuple[int, ...]
     read_useful: int  # elements actually needed
     write_useful: int
+    read_run_hosts: tuple[int, ...] | None = None  # facet axis per read run
+    write_run_hosts: tuple[int, ...] | None = None  # facet axis per write run
+
+    def __post_init__(self) -> None:
+        if self.read_run_hosts is not None and len(self.read_run_hosts) != len(self.read_runs):
+            raise ValueError("read_run_hosts must attribute every read run")
+        if self.write_run_hosts is not None and len(self.write_run_hosts) != len(self.write_runs):
+            raise ValueError("write_run_hosts must attribute every write run")
 
     @property
     def n_read_bursts(self) -> int:
@@ -217,6 +232,7 @@ def cfa_plan(
     fin = flow_in_points(space, deps, tiling, tile)
     hosts = _assign_hosts(fin, tile, tiling, widths, specs)
     read_runs: list[int] = []
+    read_hosts: list[int] = []
     for k, idx in hosts.items():
         if idx.size == 0:
             continue
@@ -226,14 +242,17 @@ def cfa_plan(
         else:
             runs = count_runs(addrs)
         read_runs.extend(runs)
+        read_hosts.extend([k] * len(runs))
 
     fout = flow_out_points(space, deps, tiling, tile)
     write_runs: list[int] = []
+    write_hosts: list[int] = []
     for k, spec in specs.items():
         fpts = facet_points(tiling, widths, k, tile)
         runs = count_runs(spec.offsets(fpts))
         assert len(runs) == 1, "full-tile contiguity violated — layout bug"
         write_runs.extend(runs)
+        write_hosts.extend([k] * len(runs))
 
     return TransferPlan(
         scheme="cfa" if boxed else "cfa-exact",
@@ -241,6 +260,8 @@ def cfa_plan(
         write_runs=tuple(write_runs),
         read_useful=int(len(fin)),
         write_useful=int(len(fout)),
+        read_run_hosts=tuple(read_hosts),
+        write_run_hosts=tuple(write_hosts),
     )
 
 

@@ -26,6 +26,7 @@ import math
 from typing import Mapping
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from .facets import FacetSpec, build_facet_specs
@@ -195,10 +196,18 @@ class CFAPipeline:
         return maps, lo, w
 
     def copy_in(self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...]) -> jnp.ndarray:
-        """Gather the tile's flow-in into a halo buffer of shape (w + t)."""
+        """Gather the tile's flow-in into a halo buffer of shape (w + t).
+
+        When the facet arrays span several devices (port-resident facets
+        under ``sweep_wavefront_sharded``) the scatter goes through a
+        host-side buffer — mixing arrays committed to different devices in
+        one ``.at[].set`` chain is a jax error — and the combined halo comes
+        back as a fresh, uncommitted array.  Single-device facets (the
+        ``sweep``/``sweep_wavefront`` hot path) keep the all-on-device path.
+        """
         maps, lo, w = self._halo_maps(tile)
         t = np.array(self.tiling.sizes)
-        H = jnp.zeros(tuple(w + t), facets[0].dtype)
+        pieces = []
         for key, pts in maps.items():
             if key == "virtual":
                 spec = self.specs[0]
@@ -212,7 +221,17 @@ class CFAPipeline:
                         spec.num_tiles[a] for a in spec.outer_axes[1:]
                     )
                 vals = flat[jnp.asarray(offs)]
-            local = pts - (lo - w)
+            pieces.append((pts - (lo - w), vals))
+        devices = set()
+        for arr in facets.values():
+            devices.update(arr.devices() if hasattr(arr, "devices") else ())
+        if len(devices) > 1:
+            H = np.zeros(tuple(w + t), dtype=np.dtype(facets[0].dtype))
+            for local, vals in pieces:
+                H[tuple(local.T)] = np.asarray(vals)
+            return jnp.asarray(H)
+        H = jnp.zeros(tuple(w + t), facets[0].dtype)
+        for local, vals in pieces:
             H = H.at[tuple(jnp.asarray(local.T))].set(vals)
         return H
 
@@ -313,6 +332,107 @@ class CFAPipeline:
                 outs = [self.execute_tile(halos[i]) for i in range(len(wave))]
             for tile, H in zip(wave, outs):
                 facets = self.copy_out(facets, tile, H)
+        return facets
+
+    # -- multi-port sharded sweep -------------------------------------------
+
+    def sweep_wavefront_sharded(
+        self,
+        inputs: jnp.ndarray,
+        dtype=jnp.float32,
+        *,
+        n_ports: int = 2,
+        mesh=None,
+        axis: str = "port",
+        assignment=None,
+        use_kernel: bool = False,
+    ) -> dict[int, jnp.ndarray]:
+        """Multi-port wavefront sweep: facet arrays sharded over a mesh axis
+        per the port repartition, anti-diagonal tile waves executed in
+        parallel via ``shard_map`` (paper §VII made an execution path).
+
+        * the facet arrays are placed on their assigned port's device
+          (``repro.distributed.sharding.shard_facets``; the facet array is the
+          unit of contiguity, so facet-granular repartition == whole-array
+          placement — ``assignment`` defaults to the LPT split of
+          ``multiport.assign_ports``, or the autotuned decision's when this
+          pipeline came from ``CFAPipeline.from_autotuned(n_ports=...)``);
+        * every wavefront's tiles are independent (backward deps strictly
+          decrease the coordinate sum), so each wave is batched, padded to a
+          multiple of the mesh axis, and executed concurrently — one shard of
+          tiles per port — through ``execute_tiles_sharded`` (Pallas kernel
+          per shard) when ``use_kernel``, else an inline ``shard_map`` of the
+          plane recurrence.
+
+        Bit-exact against the single-port ``sweep``: device placement and
+        shard_map batching change *where* tiles run, never the plane
+        arithmetic or the order facet blocks are committed.
+        """
+        from jax.sharding import NamedSharding
+
+        from repro.core.cfa.multiport import assign_ports
+        from repro.distributed.sharding import (
+            P, port_mesh, shard_facets, shard_map_compat)
+
+        if assignment is None:
+            decision = self.decision
+            if decision is not None and getattr(decision, "n_ports", 1) == n_ports:
+                # only reuse the decision's facet->port split when this
+                # pipeline actually instantiates the candidate it was
+                # computed for (from_autotuned(kernel_compatible=True) may
+                # have picked a different, kernel-addressable layout)
+                try:
+                    best = decision.best_cfa()
+                except LookupError:
+                    best = None
+                if best is not None and tuple(best.candidate.tile) == self.tiling.sizes:
+                    assignment = decision.port_assignment  # may still be None
+        if assignment is None:
+            assignment = assign_ports(self.space, self.program.deps,
+                                      self.tiling, n_ports)
+        mesh = mesh if mesh is not None else port_mesh(n_ports, axis)
+        n_shards = int(mesh.shape[axis])
+
+        facets = self.init_facets(dtype)
+        facets = self.load_inputs(facets, inputs.astype(dtype))
+        facets = shard_facets(facets, assignment.facet_to_port, mesh, axis)
+
+        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+
+        def _exec_batch(halos: jnp.ndarray) -> jnp.ndarray:
+            # one shard of the wave per port-device; each tile runs the very
+            # same execute_tile recurrence as the single-port sweep
+            return shard_map_compat(
+                jax.vmap(self.execute_tile), mesh=mesh,
+                in_specs=P(axis), out_specs=P(axis),
+            )(halos)
+
+        batch_sharding = NamedSharding(mesh, P(axis))
+        for wave in self.wavefronts():
+            halos = jnp.stack([self.copy_in(facets, t) for t in wave])
+            # pad the wave to a multiple of the mesh axis by repeating tiles
+            # (a wave can be smaller than the axis — e.g. the first wave is
+            # always one tile — so slicing the batch itself cannot under-pad)
+            target = -(-len(wave) // n_shards) * n_shards
+            if target != len(wave):
+                reps = -(-target // len(wave))
+                halos = jnp.concatenate([halos] * reps, axis=0)[:target]
+            # commit the batch to the port mesh: one shard of tiles per port
+            halos = jax.device_put(halos, batch_sharding)
+            if use_kernel:
+                from repro.kernels.stencil import execute_tiles_sharded
+
+                interiors = execute_tiles_sharded(
+                    self.program.name, halos, self.tiling.sizes, mesh,
+                    axis=axis, interpret=True)
+                outs = halos.at[:, w[0]:, w[1]:, w[2]:].set(interiors)
+            else:
+                outs = _exec_batch(halos)
+            # pull the executed planes back uncommitted so copy_out's facet
+            # updates stay resident on each facet's own port device
+            outs = np.asarray(jax.device_get(outs))
+            for i, tile in enumerate(wave):
+                facets = self.copy_out(facets, tile, jnp.asarray(outs[i]))
         return facets
 
     # -- oracle ----------------------------------------------------------------

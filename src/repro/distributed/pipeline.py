@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .sharding import shard_map_compat
+
 __all__ = ["pipeline_apply"]
 
 
@@ -39,7 +41,7 @@ def pipeline_apply(
     n_micro = x.shape[0]
 
     @functools.partial(
-        jax.shard_map,
+        shard_map_compat,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

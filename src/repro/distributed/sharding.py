@@ -38,6 +38,9 @@ __all__ = [
     "named",
     "DP_AXES",
     "batch_spec",
+    "shard_map_compat",
+    "port_mesh",
+    "shard_facets",
 ]
 
 _STATE = threading.local()
@@ -191,6 +194,61 @@ def translate_specs(tree, *, drop=("model",)):
     return jax.tree.map(
         lambda s: P(*[_drop(a, dropset) for a in s]),
         tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """``shard_map`` across the jax versions this repo supports.
+
+    Recent jax exposes ``jax.shard_map`` (with ``check_vma``); the pinned
+    0.4.x series only has ``jax.experimental.shard_map.shard_map`` (with the
+    older ``check_rep`` spelling of the same knob).  All multi-port / pipeline
+    executors go through this shim so they run on either.  The default keeps
+    jax's own replication check on; callers whose bodies the checker cannot
+    analyse (Pallas calls) pass ``check_vma=False`` explicitly.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def port_mesh(n_ports: int, axis: str = "port") -> Mesh:
+    """1-D mesh standing in for ``n_ports`` memory ports.
+
+    Uses up to ``n_ports`` local devices; with fewer devices than ports the
+    mesh folds ports onto the available devices (port p -> device p mod size),
+    so the same code runs on a laptop CPU, forced host devices, or a real
+    multi-chip slice.
+    """
+    if n_ports <= 0:
+        raise ValueError(f"n_ports must be positive: {n_ports}")
+    devs = jax.devices()
+    return Mesh(np.asarray(devs[: min(n_ports, len(devs))]), (axis,))
+
+
+def shard_facets(facets: dict, facet_to_port: dict, mesh: Mesh,
+                 axis: str = "port") -> dict:
+    """Place each facet array on its assigned port's device.
+
+    The facet array is CFA's unit of contiguity, so a port repartition at
+    facet granularity is realised by whole-array placement: facet ``k`` lives
+    on the device at mesh coordinate ``facet_to_port[k] mod axis size``.
+    Ports beyond the mesh size fold back (see ``port_mesh``).
+    """
+    n = int(mesh.shape[axis])
+    devs = list(mesh.devices.reshape(-1))
+    out = {}
+    for k, arr in facets.items():
+        p = int(facet_to_port.get(k, 0)) % n
+        dev = devs[p]
+        if getattr(arr, "devices", None) is not None and arr.devices() == {dev}:
+            out[k] = arr  # already resident on its port
+        else:
+            out[k] = jax.device_put(arr, dev)
+    return out
 
 
 def constrain_tree(tree, spec_tree):

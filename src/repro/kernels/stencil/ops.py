@@ -11,6 +11,7 @@ __all__ = [
     "execute_tiles_ref",
     "stencil_tile_op",
     "execute_tiles_from_autotuned",
+    "execute_tiles_sharded",
 ]
 
 
@@ -49,3 +50,44 @@ def execute_tiles_from_autotuned(
     tile = tuple(decision.best_cfa(kernel_compatible=kernel_compatible).candidate.tile)
     return stencil_tile_op(program_name, halos, tile,
                            use_kernel=use_kernel, interpret=interpret)
+
+
+def execute_tiles_sharded(
+    program_name: str,
+    halos: jnp.ndarray,  # (B, w0+t0, w1+t1, w2+t2), B % mesh axis size == 0
+    tile: tuple[int, int, int],
+    mesh,
+    *,
+    axis: str = "port",
+    interpret: bool = True,
+) -> jnp.ndarray:  # (B, t0, t1, t2)
+    """Execute a halo batch with its shards on different port-devices.
+
+    The multi-port analogue of ``execute_tiles``: the batch (one wavefront of
+    independent tiles) is split over the ``axis`` mesh dimension and each
+    shard runs the Pallas tile executor on its own device — tiles on
+    different ports genuinely execute concurrently.  The caller pads the
+    batch to a multiple of the mesh axis size
+    (``CFAPipeline.sweep_wavefront_sharded`` does).
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map_compat
+
+    n = int(mesh.shape[axis])
+    if halos.shape[0] % n:
+        raise ValueError(
+            f"halo batch ({halos.shape[0]}) must be a multiple of the mesh "
+            f"axis size ({n}); pad the wavefront first"
+        )
+    # commit the batch to the mesh (shard_map rejects inputs committed to a
+    # different device set, e.g. halos gathered on the default device)
+    halos = jax.device_put(halos, NamedSharding(mesh, P(axis)))
+
+    def shard(h):
+        return execute_tiles(program_name, h, tile, interpret=interpret)
+
+    return shard_map_compat(
+        shard, mesh=mesh, in_specs=P(axis), out_specs=P(axis), check_vma=False
+    )(halos)

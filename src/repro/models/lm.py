@@ -22,6 +22,35 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
+# AD-safe optimization barrier
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _barrier(x: jnp.ndarray) -> jnp.ndarray:
+    """``jax.lax.optimization_barrier`` with a differentiation rule.
+
+    The pinned jax (0.4.x) has no AD rule for ``optimization_barrier``, so the
+    bare primitive inside a ``jax.checkpoint``-wrapped scan body raises
+    ``NotImplementedError`` during the backward trace.  The barrier is
+    semantically the identity; the cotangent passes through its own barrier so
+    the anti-CSE effect also holds on the recomputed forward of the remat
+    backward pass (where the hoisting this barrier exists to stop happens).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+# ---------------------------------------------------------------------------
 # init / specs
 # ---------------------------------------------------------------------------
 
@@ -173,7 +202,7 @@ def lm_forward(
         # barrier: stops XLA hoisting the (CSE'd) f32 upcast of x out of the
         # rematted body — without it the scan saves an f32 copy of every
         # period boundary (2x activation-stack memory; measured on jamba)
-        x = jax.lax.optimization_barrier(x)
+        x = _barrier(x)
         x, _, a = body(x, period_params, None, ctx)
         return (x, aux + a), None
 

@@ -4,6 +4,47 @@ Note: device count is deliberately NOT forced here — smoke tests and benches
 must see the single real CPU device; only launch/dryrun.py sets
 ``xla_force_host_platform_device_count`` (as its first statement).
 """
+import functools
+import os
+import subprocess
+import sys
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+
+@functools.lru_cache(maxsize=1)
+def multidevice_emulation_reason() -> str | None:
+    """None when XLA_FLAGS forced-host-device emulation works, else why not.
+
+    The subprocess tests (test_distributed.py, test_specs.py) rely on
+    ``--xla_force_host_platform_device_count`` giving a fresh interpreter
+    several CPU devices.  Some jaxlib builds / constrained sandboxes ignore
+    the flag or refuse to spawn; those environments should *skip* the
+    multi-device tests with a clear reason instead of failing them.
+    """
+    probe = (
+        "import os; "
+        "os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'; "
+        "import jax; print(jax.device_count())"
+    )
+    try:
+        res = subprocess.run(
+            [sys.executable, "-c", probe], capture_output=True, text=True,
+            timeout=120, env=dict(os.environ),
+        )
+    except (OSError, subprocess.SubprocessError) as e:
+        return f"cannot spawn a python subprocess here ({e!r})"
+    if res.returncode != 0:
+        return f"probe subprocess failed (rc={res.returncode}): {res.stderr[-500:]}"
+    try:
+        n = int(res.stdout.strip().splitlines()[-1])
+    except (ValueError, IndexError):
+        return f"probe printed no device count: {res.stdout[-200:]!r}"
+    if n < 4:
+        return (
+            f"XLA_FLAGS --xla_force_host_platform_device_count is ignored "
+            f"(got {n} device(s), need >= 4)"
+        )
+    return None

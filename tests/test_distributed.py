@@ -135,6 +135,11 @@ _SPMD_SCRIPT = textwrap.dedent("""
 
 
 def _run_sub(script: str, marker: str):
+    from conftest import multidevice_emulation_reason
+
+    reason = multidevice_emulation_reason()
+    if reason is not None:
+        pytest.skip(f"multi-device emulation unavailable: {reason}")
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     res = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, env=env, timeout=600)

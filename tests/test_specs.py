@@ -84,6 +84,11 @@ _CELL_SCRIPT = textwrap.dedent("""
 
 
 def test_build_cell_compiles_on_small_mesh_subprocess():
+    from conftest import multidevice_emulation_reason
+
+    reason = multidevice_emulation_reason()
+    if reason is not None:
+        pytest.skip(f"multi-device emulation unavailable: {reason}")
     env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
     res = subprocess.run([sys.executable, "-c", _CELL_SCRIPT],
                          capture_output=True, text=True, env=env, timeout=900)

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""CI guard: every code symbol or path the docs reference must still exist.
+
+Scans the inline-backtick tokens of ``docs/*.md`` (and the results README)
+— fenced code blocks are shell/transcript examples and are skipped — and
+checks each against the repository:
+
+* tokens containing ``/`` or ending in a file suffix are treated as paths
+  (globs allowed) and must match at least one file;
+* identifier-shaped tokens (``snake_case``, ``CamelCase``, dotted
+  ``pkg.mod.attr``, optional trailing ``()``) must appear, word-bounded, in
+  at least one Python source file — so renaming or deleting a symbol without
+  updating the docs fails CI.
+
+Exit status: 0 clean, 1 with a listing of stale references.
+
+    python tools/check_doc_symbols.py            # check the default doc set
+    python tools/check_doc_symbols.py docs/x.md  # check specific files
+"""
+from __future__ import annotations
+
+import glob
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DEFAULT_DOCS = ("docs/*.md", "benchmarks/results/README.md")
+
+# directories whose .py files make up the symbol corpus
+CODE_DIRS = ("src", "benchmarks", "tests", "tools", "examples")
+
+PATH_SUFFIXES = (".py", ".md", ".json", ".txt", ".toml", ".yml", ".yaml", ".csv")
+
+# doc-prose words that look like identifiers but are not repo symbols
+ALLOWLIST = {
+    "null", "true", "false", "None",
+}
+
+_IDENT = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*(\.[A-Za-z_][A-Za-z0-9_]*)*(\(\))?$")
+_FENCE = re.compile(r"```.*?```", re.S)
+_TICK = re.compile(r"`([^`\n]+)`")
+
+
+def _corpus() -> str:
+    parts = []
+    for d in CODE_DIRS:
+        for f in sorted((ROOT / d).rglob("*.py")):
+            parts.append(f.read_text(errors="replace"))
+    return "\n".join(parts)
+
+
+def _repo_paths() -> list[str]:
+    """All tracked-ish repo paths (files and dirs), '/'-normalised, for
+    suffix matching of relative doc mentions like ``spaces.py`` or
+    ``kernels/block_attention/``."""
+    out = []
+    for p in ROOT.rglob("*"):
+        rel = p.relative_to(ROOT).as_posix()
+        if rel.startswith((".git/", ".git")) or "__pycache__" in rel:
+            continue
+        out.append(rel + ("/" if p.is_dir() else ""))
+    return out
+
+
+def _doc_tokens(path: Path) -> list[str]:
+    text = _FENCE.sub("", path.read_text(errors="replace"))
+    return _TICK.findall(text)
+
+
+def _is_path_token(tok: str) -> bool:
+    return "/" in tok or tok.endswith(PATH_SUFFIXES)
+
+
+def check(files: list[Path]) -> list[str]:
+    corpus = _corpus()
+    repo_paths = _repo_paths()
+    word_cache: dict[str, bool] = {}
+
+    def word_exists(name: str) -> bool:
+        if name not in word_cache:
+            word_cache[name] = bool(
+                re.search(rf"\b{re.escape(name)}\b", corpus))
+        return word_cache[name]
+
+    def path_exists(tok: str, doc_dir: Path) -> bool:
+        # `{tag}`-style placeholders and shell globs both mean "any"
+        pattern = re.sub(r"\{[^}]*\}", "*", tok).rstrip("/")
+        if glob.glob(str(ROOT / pattern)) or glob.glob(str(doc_dir / pattern)):
+            return True
+        # a bare or partial path (`spaces.py`, `kernels/block_attention/`)
+        # counts when some repo path ends with it
+        if any("*" in part for part in pattern.split("/")):
+            return False
+        suffix = pattern + ("/" if tok.endswith("/") else "")
+        return any(
+            p == suffix or p.endswith("/" + suffix) or p.rstrip("/").endswith("/" + pattern)
+            for p in repo_paths
+        )
+
+    stale = []
+    for doc in files:
+        for tok in _doc_tokens(doc):
+            tok = tok.strip()
+            if not tok or " " in tok or tok.startswith(("-", "$", "#", "~")):
+                continue
+            if not tok.isascii():
+                continue  # inline math, not a code reference
+            if _is_path_token(tok):
+                if not path_exists(tok, doc.parent):
+                    stale.append(f"{doc.relative_to(ROOT)}: path `{tok}` matches nothing")
+                continue
+            if not _IDENT.match(tok) or tok in ALLOWLIST:
+                continue
+            name = tok[:-2] if tok.endswith("()") else tok
+            # for dotted references every component chain is too strict;
+            # require the final attribute (the symbol being named) to exist
+            leaf = name.rsplit(".", 1)[-1]
+            if not word_exists(leaf):
+                stale.append(f"{doc.relative_to(ROOT)}: symbol `{tok}` not found in sources")
+    return stale
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [ROOT / a if not Path(a).is_absolute() else Path(a) for a in argv]
+    else:
+        files = []
+        for pat in DEFAULT_DOCS:
+            files.extend(sorted(ROOT.glob(pat)))
+    missing = [f for f in files if not f.is_file()]
+    if missing:
+        print(f"no such doc file(s): {', '.join(map(str, missing))}")
+        return 1
+    stale = check(files)
+    for s in stale:
+        print(s)
+    if stale:
+        print(f"\n{len(stale)} stale doc reference(s); update the docs or the code.")
+        return 1
+    print(f"doc symbols OK ({len(files)} file(s) checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
