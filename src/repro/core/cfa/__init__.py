@@ -34,6 +34,8 @@ Burst plans (``plans``)
     * ``TransferPlan``         — exact per-tile burst statistics (§V-C).
     * ``count_runs``           — maximal contiguous runs of an address set.
     * ``cfa_plan``             — CFA reads/writes, boxed per §V-C1.
+    * ``cfa_piece_census``     — §IV-D/H/J flow-in piece accounting (the
+      d >= 4 unmergeable pieces made countable).
     * ``original_layout_plan`` — Bayliss [16] row-major baseline (Fig. 15).
     * ``bounding_box_plan``    — Pouchet [8] bounding-box baseline (Fig. 15).
     * ``data_tiling_plan``     — Ozturk [19] block-major baseline (Fig. 15).
@@ -93,6 +95,7 @@ from .plans import (
     TransferPlan,
     count_runs,
     cfa_plan,
+    cfa_piece_census,
     original_layout_plan,
     bounding_box_plan,
     data_tiling_plan,
@@ -123,7 +126,7 @@ __all__ = [
     "flow_in_points", "flow_out_points", "facet_points", "neighbor_offsets",
     "FacetSpec", "build_facet_specs", "extension_dir", "CONTIGUITY_LEVELS",
     "pack_facet", "pack_all", "unpack_into",
-    "TransferPlan", "count_runs", "cfa_plan", "original_layout_plan",
+    "TransferPlan", "count_runs", "cfa_plan", "cfa_piece_census", "original_layout_plan",
     "bounding_box_plan", "data_tiling_plan", "interior_tile",
     "BurstModel", "PortedPlan", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
     "PortAssignment", "PORT_STRATEGIES", "assign_ports",

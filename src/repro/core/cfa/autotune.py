@@ -272,11 +272,17 @@ class LayoutDecision:
         the Pallas kernels consume).
 
         ``kernel_compatible`` further restricts to layouts the
-        ``facet_fetch`` kernel's static BlockSpecs can address: the paper's
-        default layout, facet widths dividing the tile, and at least two
-        tiles per axis (so an interior exists).
+        ``facet_fetch`` kernel's static BlockSpecs can address: 3-D spaces
+        only (the kernel's block maps are 3-D), the paper's default layout,
+        facet widths dividing the tile, and at least two tiles per axis (so
+        an interior exists).
         """
         d = len(self.space)
+        if kernel_compatible and d != 3:
+            raise LookupError(
+                f"the facet_fetch kernel addresses 3-D layouts only; "
+                f"{self.program} @ {self.space} is {d}-D"
+            )
         for s in self.ranked:
             c = s.candidate
             if c.scheme != "cfa":
@@ -372,6 +378,11 @@ def candidate_tilings(
     ``max_halo_elems`` bounds the on-chip halo buffer prod(t_a + w_a) — the
     paper's BRAM constraint, our VMEM constraint.  Deterministic order:
     descending tile volume (longer bursts first), then lexicographic.
+
+    The enumeration is per-dimension (one divisor list per axis, product
+    across axes), so 2-D and 4-D spaces get search spaces of the right
+    shape automatically; the seeded sampling in ``autotune`` keeps the
+    larger d >= 4 products within budget.
     """
     per_axis: list[list[int]] = []
     for n, w in zip(space_sizes, widths):

@@ -64,17 +64,27 @@ class PortedPlan:
     facet_to_port: tuple[tuple[int, int], ...] | None = None
 
     def __post_init__(self) -> None:
+        # Per-port schedules are consumed pairwise (zip with strict=True
+        # below); a silent length mismatch would drop ports and under-report
+        # the modeled transfer time, so reject it at construction.
         if len(self.read_runs_by_port) != self.n_ports:
-            raise ValueError("read_runs_by_port must have n_ports entries")
+            raise ValueError(
+                f"read_runs_by_port has {len(self.read_runs_by_port)} "
+                f"entries, need n_ports={self.n_ports}"
+            )
         if len(self.write_runs_by_port) != self.n_ports:
-            raise ValueError("write_runs_by_port must have n_ports entries")
+            raise ValueError(
+                f"write_runs_by_port has {len(self.write_runs_by_port)} "
+                f"entries, need n_ports={self.n_ports}"
+            )
 
     @property
     def port_elems(self) -> tuple[int, ...]:
         """Elements moved per port (the repartition's load vector)."""
         return tuple(
             int(sum(rr) + sum(wr))
-            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port)
+            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port,
+                              strict=True)
         )
 
     @property
@@ -93,7 +103,8 @@ class PortedPlan:
     def n_bursts(self) -> int:
         return sum(
             len(rr) + len(wr)
-            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port)
+            for rr, wr in zip(self.read_runs_by_port, self.write_runs_by_port,
+                              strict=True)
         )
 
     @property
@@ -127,9 +138,12 @@ class BurstModel:
         for the slowest port — the max over per-port burst schedules (§VII).
         """
         if isinstance(plan, PortedPlan):
+            # strict: a ragged ported plan must fail loudly, not drop the
+            # trailing ports from the max (under-reporting the time)
             return max(
                 self.time_s(rr) + self.time_s(wr)
-                for rr, wr in zip(plan.read_runs_by_port, plan.write_runs_by_port)
+                for rr, wr in zip(plan.read_runs_by_port,
+                                  plan.write_runs_by_port, strict=True)
             )
         return self.time_s(plan.read_runs) + self.time_s(plan.write_runs)
 

@@ -67,9 +67,19 @@ CONTIGUITY_LEVELS = ("full-tile", "inter-tile", "intra-tile")
 
 
 def extension_dir(axis: int, ndim: int) -> int:
-    """Cyclic inter-tile contiguity direction ``c_k = (k+1) mod d``."""
+    """Cyclic inter-tile contiguity direction ``c_k = (k+1) mod d``.
+
+    §IV-H needs at least one projected axis to extend along, so for
+    ``ndim == 1`` there is none: the convention ``c_k == k`` explicitly
+    means "no extension direction" (the facet layout degenerates to
+    full-tile blocks).  ``build_facet_specs`` validates that ``c_k == k``
+    is only ever used in that degenerate case.  For ``ndim == 2`` the
+    choice is forced: the single other axis.
+    """
+    if not (0 <= axis < ndim):
+        raise ValueError(f"facet axis {axis} out of range for ndim={ndim}")
     if ndim == 1:
-        return axis  # degenerate: no projected axes; unused
+        return axis  # degenerate: no projected axes (explicit "none" marker)
     return (axis + 1) % ndim
 
 
@@ -88,6 +98,16 @@ class FacetSpec:
     def __post_init__(self) -> None:
         if self.ext_dir < 0:
             object.__setattr__(self, "ext_dir", extension_dir(self.axis, self.ndim))
+        if not (0 <= self.ext_dir < self.ndim):
+            raise ValueError(
+                f"extension direction {self.ext_dir} out of range for "
+                f"{self.ndim}-D facet_{self.axis}"
+            )
+        if self.ext_dir == self.axis and self.ndim > 1:
+            raise ValueError(
+                f"facet_{self.axis}: ext_dir == axis is the degenerate 1-D "
+                "marker only; a d >= 2 facet must extend along a projected axis"
+            )
 
     @property
     def ndim(self) -> int:
@@ -216,8 +236,17 @@ def build_facet_specs(
                 "tiles must be at least as deep as the dependence pattern"
             )
         c = ext.get(k, extension_dir(k, d))
-        if not (0 <= c < d) or (c == k and d > 1):
-            raise ValueError(f"invalid extension direction {c} for facet axis {k}")
+        if d == 1:
+            if c != k:
+                raise ValueError(
+                    f"1-D space: facet_{k} has no projected axis to extend "
+                    f"along; the only legal value is c == k (got {c})"
+                )
+        elif not (0 <= c < d) or c == k:
+            raise ValueError(
+                f"invalid extension direction {c} for facet axis {k}: must "
+                f"be a projected axis (0 <= c < {d}, c != {k})"
+            )
         outer, inner = _facet_axis_orders(k, c, d, contiguity)
         specs[k] = FacetSpec(
             axis=k,

@@ -29,6 +29,10 @@ leave ports idle, so more available ports never models slower) and returns
 the fastest :class:`PortedPlan` under the burst model.  ``assign_ports`` /
 ``port_speedup`` are the facet-level entry points used by the autotuner,
 the sharded wavefront executor and the multiport benchmark.
+
+Everything here is dimension-generic: facets are keyed by canonical axis,
+so a 2-D program's 2 facets or a 4-D program's 4 facets repartition through
+the same code as the 3-D Table I suite.
 """
 from __future__ import annotations
 

@@ -40,6 +40,7 @@ __all__ = [
     "TransferPlan",
     "count_runs",
     "cfa_plan",
+    "cfa_piece_census",
     "original_layout_plan",
     "bounding_box_plan",
     "data_tiling_plan",
@@ -151,11 +152,17 @@ def _assign_hosts(
 ) -> dict[int, np.ndarray]:
     """Assign each flow-in point to the facet array it is read from.
 
-    Implements the paper's choices: single-axis pieces from their own facet;
-    two-axis pieces from the facet whose extension direction is the other
-    axis (merged bursts, §IV-H); deeper corners from the facet minimising
-    the number of leftover runs (§IV-I picks the facet whose extension axis
-    has the thinnest width — for time-skewed stencils that is the time axis).
+    Implements the paper's choices, generalised to any dimension: single-axis
+    pieces come from their own facet; a level-l piece (1 < l < d, crossing l
+    axes) comes from a candidate facet whose extension direction is another
+    crossed axis, so it merges with that host's lower-level run (§IV-H); the
+    level-d corner comes from the facet minimising the number of leftover
+    runs (§IV-I picks the facet whose extension axis has the thinnest width —
+    for time-skewed stencils that is the time axis).  For d >= 4 some mid-
+    level pieces have *no* candidate whose extension direction is crossed
+    (§IV-J): they fall back to an arbitrary candidate and cost extra bursts,
+    which the exact run counting below measures rather than hides
+    (``cfa_piece_census`` reports the accounting).
     """
     d = tiling.ndim
     t = np.asarray(tiling.sizes, dtype=np.int64)
@@ -175,18 +182,18 @@ def _assign_hosts(
         sub_delta = delta[sel]
         if lvl == 1:
             host = np.argmax(sub_cand, axis=1)
-        elif lvl == 2:
-            # prefer host h whose extension direction is the other crossed
-            # axis: the piece then merges with h's first-level facet read.
+        elif lvl < d:
+            # prefer a host h whose extension direction is another crossed
+            # axis: the piece then merges with h's lower-level facet read.
             for h in specs:
                 c = specs[h].ext_dir
                 ok = sub_cand[:, h] & (sub_delta[:, c] < 0) & (host < 0)
                 host[ok] = h
-            # fallback (non-mergeable pair, paper §IV-J): first candidate
+            # fallback (non-mergeable piece, paper §IV-J): first candidate
             rem = host < 0
             host[rem] = np.argmax(sub_cand[rem], axis=1)
         else:
-            # corner pieces: host minimising leftover runs = thinnest extension
+            # the level-d corner: host minimising leftover runs = thinnest ext
             order = sorted(specs, key=lambda h: (widths[specs[h].ext_dir], -h))
             for h in order:
                 ok = sub_cand[:, h] & (host < 0)
@@ -202,6 +209,70 @@ def _assign_hosts(
         for h in specs:
             out[h].append(idx[host == h])
     return {h: np.concatenate(v) if v else np.empty(0, dtype=np.int64) for h, v in out.items()}
+
+
+def cfa_piece_census(
+    space: IterSpace,
+    deps: Deps,
+    tiling: Tiling,
+    tile: Sequence[int] | None = None,
+    *,
+    ext_dirs: Mapping[int, int] | None = None,
+) -> dict:
+    """§IV-D/H/J accounting of one tile's flow-in pieces, for the paper's
+    final (intra-tile contiguity) layout family.
+
+    A *piece* is the set of flow-in points sharing a backward neighbour tile
+    (offset ``delta`` in {0,-1}^d, §IV-D) and an assigned host facet.
+    Returns a dict with
+
+    * ``pieces_by_level`` — piece count per neighbour level (number of
+      crossed axes),
+    * ``merged``          — pieces that extend an existing burst: level-1
+      base reads, mid-level pieces whose host's extension direction is a
+      crossed axis (§IV-H), and the level-d corner, whose crossed set
+      contains every axis and which intra-tile contiguity makes a block
+      suffix (§IV-I),
+    * ``unmergeable``     — pieces with no such host.  Impossible for
+      d <= 3 (the paper's construction reaches d+1 read bursts); generally
+      unavoidable for d >= 4 (§IV-J) — each one starts an extra read burst,
+      which ``cfa_plan``'s exact run counting measures.
+
+    The merge model above describes the intra-tile layout only — weaker
+    contiguity levels merge by address coincidence, not by construction, so
+    their burst counts must be read off ``cfa_plan`` directly.
+    """
+    if tile is None:
+        tile = interior_tile(space, tiling)
+    widths = facet_widths(deps)
+    specs = build_facet_specs(space, deps, tiling, ext_dirs=ext_dirs,
+                              contiguity="intra-tile")
+    fin = flow_in_points(space, deps, tiling, tile)
+    hosts = _assign_hosts(fin, tile, tiling, widths, specs)
+    d = tiling.ndim
+    t = np.asarray(tiling.sizes, dtype=np.int64)
+    q0 = np.asarray(tile, dtype=np.int64)
+    by_level: dict[int, int] = {}
+    merged = unmergeable = 0
+    for k, idx in hosts.items():
+        if idx.size == 0:
+            continue
+        delta = fin[idx] // t - q0
+        for dlt in np.unique(delta, axis=0):
+            lvl = int((dlt < 0).sum())
+            by_level[lvl] = by_level.get(lvl, 0) + 1
+            # the level-d corner crosses every axis, so ext_crossed also
+            # covers it (§IV-I: the corner is a suffix of the host's block)
+            ext_crossed = dlt[specs[k].ext_dir] < 0
+            if lvl == 1 or ext_crossed:
+                merged += 1
+            else:
+                unmergeable += 1
+    return {
+        "pieces_by_level": dict(sorted(by_level.items())),
+        "merged": merged,
+        "unmergeable": unmergeable,
+    }
 
 
 def cfa_plan(

@@ -12,6 +12,13 @@ where each previous plane is passed *with its backward halo attached* (halo
 width ``w_a`` on the low side of each spatial axis ``a``).  Out-of-space
 reads are zero (Dirichlet boundary), making the recurrence total on the
 rectangular space.
+
+The suite is dimension-generic: a program's iteration space is d-dimensional
+(time + d-1 spatial axes) and planes are (d-1)-dimensional.  Besides the 3-D
+Table I benchmarks, the registry carries ``heat1d`` (a 1-D heat equation as
+a 2-D tiled space) and ``heat3d`` (a 3-D spatial heat equation as a 4-D
+space — the §IV-J regime where some k-th-level neighbours no longer merge
+into one burst).
 """
 from __future__ import annotations
 
@@ -54,21 +61,31 @@ class StencilProgram:
         return Tiling(tuple(sizes) if sizes is not None else self.default_tile)
 
 
+def _shiftn(prev: jnp.ndarray, offs: Sequence[int], w: tuple[int, ...]) -> jnp.ndarray:
+    """Read ``prev`` (a (d-1)-D plane with low-side halo ``w[1:]``) at the
+    spatial offset vector ``offs`` (all components <= 0), returning the
+    interior-sized plane.  Dimension-generic ``_shift2``."""
+    p = jnp.asarray(prev)
+    sl = tuple(
+        slice(w[a + 1] + o, w[a + 1] + o + (p.shape[a] - w[a + 1]))
+        for a, o in enumerate(offs)
+    )
+    return p[sl]
+
+
 def _shift2(prev: jnp.ndarray, di: int, dj: int, w: tuple[int, ...]) -> jnp.ndarray:
     """Read ``prev`` (with low-side halo (w1, w2)) at spatial offset (di, dj),
     di, dj <= 0, returning the interior-sized plane."""
-    w1, w2 = w[1], w[2]
-    t1 = prev.shape[0] - w1
-    t2 = prev.shape[1] - w2
-    return jnp.asarray(prev)[w1 + di : w1 + di + t1, w2 + dj : w2 + dj + t2]
+    return _shiftn(prev, (di, dj), w)
 
 
-def _jacobi_update(offsets: Sequence[tuple[int, int]], coeffs: Sequence[float]):
+def _jacobi_update(offsets: Sequence[tuple[int, ...]], coeffs: Sequence[float]):
+    """Depth-1 weighted-sum update over spatial offsets, any dimension."""
     def update(prev_planes: Sequence[jnp.ndarray], w: tuple[int, ...]) -> jnp.ndarray:
         p = prev_planes[-1]  # plane s-1 (depth-1 history used by jacobi family)
         acc = None
-        for (di, dj), c in zip(offsets, coeffs):
-            v = _shift2(p, di, dj, w) * float(c)  # python float: no promotion
+        for off, c in zip(offsets, coeffs):
+            v = _shiftn(p, off, w) * float(c)  # python float: no promotion
             acc = v if acc is None else acc + v
         return acc
 
@@ -88,6 +105,27 @@ _GA_OFF = [(a - 2, b - 2) for a in range(-2, 3) for b in range(-2, 3)]
 _GA = Deps(tuple((-1, a, b) for a, b in _GA_OFF))
 _GA_K = np.outer([1, 4, 6, 4, 1], [1, 4, 6, 4, 1]).astype(np.float64)
 _GA_K /= _GA_K.sum()
+
+# --- heat1d: 1-D heat equation as a 2-D tiled space; skew (1) ---------------
+# textbook: u[t,x] = a*u[t-1,x-1] + (1-2a)*u[t-1,x] + a*u[t-1,x+1]; skewing
+# x by t maps the offsets dx in (-1, 0, 1) to backward vectors (-1, dx-1).
+_H1_OFF = [(-2,), (-1,), (0,)]
+_H1 = Deps(tuple((-1, *o) for o in _H1_OFF))
+_H1_A = 0.25  # diffusion number; coeffs (a, 1-2a, a)
+
+# --- heat3d: 3-D spatial heat equation as a 4-D space; skew (1,1,1) ---------
+# 7-point stencil: centre + one neighbour per spatial axis and direction;
+# skewing each spatial axis by t maps offset d in {-1,0,1} to d-1 on that
+# axis.  This is the d >= 4 regime of §IV-J: level-2/3 neighbour pieces
+# whose crossed axes miss every candidate facet's extension direction can
+# no longer merge into an existing burst.
+_H3_OFF = [(0, 0, 0)] + [
+    tuple(s if a == ax else 0 for a in range(3))
+    for ax in range(3) for s in (-1, 1)
+]
+_H3 = Deps(tuple((-1, *(c - 1 for c in o)) for o in _H3_OFF))
+_H3_A = 0.1  # coeffs: centre 1-6a, each neighbour a
+
 
 # --- smith-waterman-3seq: 3-sequence alignment; skew s = i+j+k --------------
 # original deps: the 7 nonzero corners of {0,-1}^3; skewed by s = i+j+k they
@@ -175,6 +213,28 @@ PROGRAMS: dict[str, StencilProgram] = {
         equivalent_app="Alignment of 3 sequences",
         skew=(0, 0),  # skew folded into axis 0 = i+j+k
         plane_update=_sw_update,
+    ),
+    # -- beyond Table I: non-3-D workloads (the N-D executor path) ----------
+    "heat1d": StencilProgram(
+        name="heat1d",
+        deps=_H1,
+        default_tile=(8, 8),
+        paper_tiles=((8, 8), (16, 16), (32, 32), (64, 64)),
+        equivalent_app="1-D heat equation (2-D tiled space)",
+        skew=(1,),
+        plane_update=_jacobi_update(_H1_OFF, [_H1_A, 1 - 2 * _H1_A, _H1_A]),
+    ),
+    "heat3d": StencilProgram(
+        name="heat3d",
+        deps=_H3,
+        default_tile=(4, 4, 4, 4),
+        paper_tiles=((4, 4, 4, 4), (2, 4, 4, 4), (4, 8, 8, 8)),
+        equivalent_app="3-D heat equation (4-D tiled space, §IV-J regime)",
+        skew=(1, 1, 1),
+        plane_update=_jacobi_update(
+            [tuple(c - 1 for c in o) for o in _H3_OFF],
+            [1 - 6 * _H3_A] + [_H3_A] * 6,
+        ),
     ),
 }
 

@@ -115,12 +115,17 @@ class Tiling:
         return len(self.sizes)
 
     def num_tiles(self, space: IterSpace) -> tuple[int, ...]:
-        for n, t in zip(space.sizes, self.sizes):
+        if space.ndim != self.ndim:
+            raise ValueError(
+                f"tiling {self.sizes} is {self.ndim}-D but the space "
+                f"{space.sizes} is {space.ndim}-D"
+            )
+        for n, t in zip(space.sizes, self.sizes, strict=True):
             if n % t:
                 raise ValueError(
                     f"space {space.sizes} not divisible by tiles {self.sizes}; pad first"
                 )
-        return tuple(n // t for n, t in zip(space.sizes, self.sizes))
+        return tuple(n // t for n, t in zip(space.sizes, self.sizes, strict=True))
 
 
 def facet_widths(deps: Deps) -> tuple[int, ...]:

@@ -17,6 +17,11 @@ On real hardware the three phases run as a coarse-grain pipeline
 (paper Fig. 13, DATAFLOW); in Pallas the same overlap comes for free from
 grid pipelining — see ``repro.kernels.stencil``.  This module is the
 correctness/reference path and is deliberately written tile-by-tile.
+
+The pipeline is dimension-generic (the paper's construction is, §IV-F..J):
+any d >= 2 works — one time axis plus d-1 spatial axes — so 2-D programs
+(``heat1d``), the 3-D Table I suite, and 4-D programs (``heat3d``, the
+§IV-J regime) all run through the same code path.
 """
 from __future__ import annotations
 
@@ -50,8 +55,16 @@ class CFAPipeline:
     num_tiles: tuple[int, ...] = dataclasses.field(init=False)
 
     def __post_init__(self) -> None:
-        if self.space.ndim != 3:
-            raise ValueError("the reference executor supports 3-D programs (Table I)")
+        if self.space.ndim < 2:
+            raise ValueError(
+                "the executor needs a time axis plus at least one spatial "
+                f"axis (d >= 2); got a {self.space.ndim}-D space"
+            )
+        if self.program.ndim != self.space.ndim:
+            raise ValueError(
+                f"program {self.program.name!r} is {self.program.ndim}-D but "
+                f"the space is {self.space.ndim}-D"
+            )
         self.specs = build_facet_specs(
             self.space, self.program.deps, self.tiling,
             ext_dirs=dict(self.ext_dirs) if self.ext_dirs is not None else None,
@@ -121,17 +134,21 @@ class CFAPipeline:
     def load_inputs(
         self, facets: dict[int, jnp.ndarray], inputs: jnp.ndarray
     ) -> dict[int, jnp.ndarray]:
-        """Pack live-in planes (w_0, N_1, N_2) into the virtual facet_0 row."""
+        """Pack live-in planes (w_0, N_1, .., N_{d-1}) into the virtual
+        facet_0 row."""
         spec = self.specs[0]
         w0 = spec.width
         if inputs.shape != (w0, *self.space.sizes[1:]):
             raise ValueError(f"inputs must be {(w0, *self.space.sizes[1:])}")
         f0 = facets[0]
         t = self.tiling.sizes
-        for q1 in range(self.num_tiles[1]):
-            for q2 in range(self.num_tiles[2]):
-                blk = inputs[:, q1 * t[1] : (q1 + 1) * t[1], q2 * t[2] : (q2 + 1) * t[2]]
-                f0 = self._store_block(f0, spec, (-1, q1, q2), blk, virtual=True)
+        for q in itertools.product(*(range(n) for n in self.num_tiles[1:])):
+            sl = tuple(
+                slice(q[a - 1] * t[a], (q[a - 1] + 1) * t[a])
+                for a in range(1, self.space.ndim)
+            )
+            blk = inputs[(slice(None), *sl)]
+            f0 = self._store_block(f0, spec, (-1, *q), blk, virtual=True)
         facets = dict(facets)
         facets[0] = f0
         return facets
@@ -167,7 +184,8 @@ class CFAPipeline:
         with x_0 < 0 come from the virtual live-in row; points outside the
         space elsewhere keep the zero boundary value.
         """
-        w = np.array([self.specs[a].width if a in self.specs else 0 for a in range(3)])
+        d = self.space.ndim
+        w = np.array([self.specs[a].width if a in self.specs else 0 for a in range(d)])
         lo = np.array(tile) * np.array(self.tiling.sizes)
         hi = lo + np.array(self.tiling.sizes)
         pts = box_points(lo - w, hi)
@@ -175,7 +193,7 @@ class CFAPipeline:
         pts = pts[below]
         # spatially out-of-space points are zero-boundary; x_0 < 0 is live-in
         in_space = np.ones(len(pts), dtype=bool)
-        for a in range(1, 3):
+        for a in range(1, d):
             in_space &= (pts[:, a] >= 0) & (pts[:, a] < self.space.sizes[a])
         in_space &= pts[:, 0] < self.space.sizes[0]
         pts = pts[in_space]
@@ -257,16 +275,29 @@ class CFAPipeline:
 
     # -- execute ---------------------------------------------------------------
 
+    @property
+    def widths(self) -> tuple[int, ...]:
+        """Facet width per axis (0 for axes that carry no facet)."""
+        return tuple(
+            self.specs[a].width if a in self.specs else 0
+            for a in range(self.space.ndim)
+        )
+
+    def _interior_slices(self, w: tuple[int, ...]) -> tuple[slice, ...]:
+        """Index of the tile interior within a (w + t)-shaped halo buffer."""
+        return tuple(slice(w[a], None) for a in range(self.space.ndim))
+
     def execute_tile(self, H: jnp.ndarray) -> jnp.ndarray:
         """Run the plane recurrence over the halo buffer; returns the filled
         buffer (interior planes computed in place)."""
-        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        w = self.widths
         t = self.tiling.sizes
         depth = w[0]
+        spatial = self._interior_slices(w)[1:]
         for s in range(t[0]):
             prev = [H[w[0] + s - m] for m in range(depth, 0, -1)]
             plane = self.program.plane_update(prev, w)
-            H = H.at[w[0] + s, w[1] :, w[2] :].set(plane)
+            H = H.at[(w[0] + s, *spatial)].set(plane)
         return H
 
     # -- copy-out ---------------------------------------------------------------
@@ -274,12 +305,12 @@ class CFAPipeline:
     def copy_out(
         self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...], H: jnp.ndarray
     ) -> dict[int, jnp.ndarray]:
-        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        w = self.widths
         t = self.tiling.sizes
-        interior = H[w[0] :, w[1] :, w[2] :]
+        interior = H[self._interior_slices(w)]
         out = dict(facets)
         for k, spec in self.specs.items():
-            sl = [slice(None)] * 3
+            sl = [slice(None)] * self.space.ndim
             sl[k] = slice(t[k] - spec.width, t[k])
             out[k] = self._store_block(out[k], spec, tile, interior[tuple(sl)])
         return out
@@ -316,7 +347,7 @@ class CFAPipeline:
         (through the Pallas tile executor when ``use_kernel``)."""
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
-        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        interior = self._interior_slices(self.widths)
         for wave in self.wavefronts():
             halos = jnp.stack([self.copy_in(facets, t) for t in wave])
             if use_kernel:
@@ -326,7 +357,7 @@ class CFAPipeline:
                                           self.tiling.sizes, interpret=True)
                 outs = []
                 for i in range(len(wave)):
-                    H = halos[i].at[w[0]:, w[1]:, w[2]:].set(interiors[i])
+                    H = halos[i].at[interior].set(interiors[i])
                     outs.append(H)
             else:
                 outs = [self.execute_tile(halos[i]) for i in range(len(wave))]
@@ -397,7 +428,7 @@ class CFAPipeline:
         facets = self.load_inputs(facets, inputs.astype(dtype))
         facets = shard_facets(facets, assignment.facet_to_port, mesh, axis)
 
-        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        interior = self._interior_slices(self.widths)
 
         def _exec_batch(halos: jnp.ndarray) -> jnp.ndarray:
             # one shard of the wave per port-device; each tile runs the very
@@ -425,7 +456,7 @@ class CFAPipeline:
                 interiors = execute_tiles_sharded(
                     self.program.name, halos, self.tiling.sizes, mesh,
                     axis=axis, interpret=True)
-                outs = halos.at[:, w[0]:, w[1]:, w[2]:].set(interiors)
+                outs = halos.at[(slice(None), *interior)].set(interiors)
             else:
                 outs = _exec_batch(halos)
             # pull the executed planes back uncommitted so copy_out's facet
@@ -439,13 +470,14 @@ class CFAPipeline:
 
     def reference_volume(self, inputs: jnp.ndarray) -> jnp.ndarray:
         """Untiled plane-by-plane sweep over the full space (the oracle)."""
-        w = tuple(self.specs[a].width if a in self.specs else 0 for a in range(3))
+        w = self.widths
         N = self.space.sizes
         depth = w[0]
+        pad = [(w[a], 0) for a in range(1, self.space.ndim)]
         hist = [jnp.asarray(inputs[m]) for m in range(depth)]  # planes -w0..-1
         planes = []
         for _ in range(N[0]):
-            padded = [jnp.pad(h, ((w[1], 0), (w[2], 0))) for h in hist]
+            padded = [jnp.pad(h, pad) for h in hist]
             new = self.program.plane_update(padded, w)
             planes.append(new)
             hist = hist[1:] + [new] if depth > 1 else [new]

@@ -79,6 +79,12 @@ def fetch_interior_halos(
     prog = get_program(program_name)
     from repro.core.cfa import IterSpace, Tiling, build_facet_specs
 
+    if len(space) != 3 or prog.ndim != 3:
+        raise ValueError(
+            "the facet_fetch kernel's static BlockSpecs address 3-D facet "
+            f"layouts only (got a {len(space)}-D space); non-3-D programs "
+            "take CFAPipeline.copy_in / kernels.stencil instead"
+        )
     specs = build_facet_specs(IterSpace(space), prog.deps, Tiling(tile))
     w = tuple(specs[a].width if a in specs else 0 for a in range(3))
     t = tile

@@ -18,7 +18,7 @@ __all__ = [
 def stencil_tile_op(
     program_name: str,
     halos: jnp.ndarray,
-    tile: tuple[int, int, int],
+    tile: tuple[int, ...],
     *,
     use_kernel: bool = True,
     interpret: bool = True,
@@ -54,13 +54,13 @@ def execute_tiles_from_autotuned(
 
 def execute_tiles_sharded(
     program_name: str,
-    halos: jnp.ndarray,  # (B, w0+t0, w1+t1, w2+t2), B % mesh axis size == 0
-    tile: tuple[int, int, int],
+    halos: jnp.ndarray,  # (B, w0+t0, .., w_{d-1}+t_{d-1}), B % mesh axis size == 0
+    tile: tuple[int, ...],
     mesh,
     *,
     axis: str = "port",
     interpret: bool = True,
-) -> jnp.ndarray:  # (B, t0, t1, t2)
+) -> jnp.ndarray:  # (B, t0, .., t_{d-1})
     """Execute a halo batch with its shards on different port-devices.
 
     The multi-port analogue of ``execute_tiles``: the batch (one wavefront of

@@ -16,19 +16,20 @@ from repro.core.cfa.programs import StencilProgram, get_program
 
 def execute_tiles_ref(
     program: StencilProgram | str,
-    halos: jnp.ndarray,  # (B, w0+t0, w1+t1, w2+t2)
-    tile: tuple[int, int, int],
-) -> jnp.ndarray:  # (B, t0, t1, t2)
+    halos: jnp.ndarray,  # (B, w0+t0, .., w_{d-1}+t_{d-1})
+    tile: tuple[int, ...],
+) -> jnp.ndarray:  # (B, t0, .., t_{d-1})
     if isinstance(program, str):
         program = get_program(program)
     w = program.widths
-    t0, t1, t2 = tile
+    d = len(tile)
+    spatial = tuple(slice(w[a], None) for a in range(1, d))
 
     def one(H):
-        for s in range(t0):
+        for s in range(tile[0]):
             prev = [H[w[0] + s - m] for m in range(w[0], 0, -1)]
             plane = program.plane_update(prev, w)
-            H = H.at[w[0] + s, w[1] :, w[2] :].set(plane)
-        return H[w[0] :, w[1] :, w[2] :]
+            H = H.at[(w[0] + s, *spatial)].set(plane)
+        return H[(slice(w[0], None), *spatial)]
 
     return jax.vmap(one)(halos)

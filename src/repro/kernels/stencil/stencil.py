@@ -31,48 +31,52 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.cfa.programs import StencilProgram, get_program
 
 
-def _update_plane(program: StencilProgram, prev_planes, w, t1: int, t2: int):
-    """Evaluate the program's plane update on VMEM values (static shapes)."""
-    return program.plane_update(prev_planes, w)
-
-
 def _tile_kernel(h_ref, o_ref, scratch, *, program: StencilProgram,
-                 tile: tuple[int, int, int]):
+                 tile: tuple[int, ...]):
     w = program.widths
-    t0, t1, t2 = tile
+    d = len(tile)
+    spatial = tuple(slice(w[a], None) for a in range(1, d))
     # Stage the halo buffer into the scratch working set once; all further
     # reads/writes are VMEM-local.
     scratch[...] = h_ref[...]
-    for s in range(t0):  # t0 is static: fully unrolled time loop
+    for s in range(tile[0]):  # t0 is static: fully unrolled time loop
         prev = [scratch[w[0] + s - m] for m in range(w[0], 0, -1)]
-        plane = _update_plane(program, prev, w, t1, t2)
-        scratch[w[0] + s, w[1]:, w[2]:] = plane
-    o_ref[...] = scratch[w[0]:, w[1]:, w[2]:]
+        plane = program.plane_update(prev, w)  # static shapes: VMEM values
+        scratch[(w[0] + s, *spatial)] = plane
+    o_ref[...] = scratch[(slice(w[0], None), *spatial)]
 
 
 @functools.partial(jax.jit, static_argnames=("program_name", "tile", "interpret"))
 def execute_tiles(
     program_name: str,
-    halos: jnp.ndarray,  # (B, w0+t0, w1+t1, w2+t2)
-    tile: tuple[int, int, int],
+    halos: jnp.ndarray,  # (B, w0+t0, .., w_{d-1}+t_{d-1})
+    tile: tuple[int, ...],
     *,
     interpret: bool = True,
-) -> jnp.ndarray:  # (B, t0, t1, t2)
-    """Run the tile executor kernel over a batch of gathered halo buffers."""
+) -> jnp.ndarray:  # (B, t0, .., t_{d-1})
+    """Run the tile executor kernel over a batch of gathered halo buffers.
+
+    Dimension-generic: ``tile`` has one entry per iteration-space axis
+    (time first), so 2-D (``heat1d``), 3-D (Table I) and 4-D (``heat3d``)
+    programs share this path.
+    """
     program = get_program(program_name)
     w = program.widths
-    t0, t1, t2 = tile
-    hshape = (w[0] + t0, w[1] + t1, w[2] + t2)
+    d = len(tile)
+    if program.ndim != d:
+        raise ValueError(f"{program_name} is {program.ndim}-D, tile is {d}-D")
+    hshape = tuple(w[a] + tile[a] for a in range(d))
     if halos.shape[1:] != hshape:
         raise ValueError(f"halos must be (B, {hshape}), got {halos.shape}")
     B = halos.shape[0]
+    zeros = (0,) * d
     kernel = functools.partial(_tile_kernel, program=program, tile=tile)
     return pl.pallas_call(
         kernel,
         grid=(B,),
-        in_specs=[pl.BlockSpec((None, *hshape), lambda b: (b, 0, 0, 0))],
-        out_specs=pl.BlockSpec((None, t0, t1, t2), lambda b: (b, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, t0, t1, t2), halos.dtype),
+        in_specs=[pl.BlockSpec((None, *hshape), lambda b: (b, *zeros))],
+        out_specs=pl.BlockSpec((None, *tile), lambda b: (b, *zeros)),
+        out_shape=jax.ShapeDtypeStruct((B, *tile), halos.dtype),
         scratch_shapes=[pltpu.VMEM(hshape, halos.dtype)],
         interpret=interpret,
     )(halos)

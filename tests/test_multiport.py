@@ -131,6 +131,30 @@ def test_balance_ignores_idle_padded_ports():
     assert pp.balance == pytest.approx(max(loaded) / (sum(loaded) / len(loaded)))
 
 
+def test_ported_plan_rejects_ragged_port_schedules():
+    """Regression: a read/write port-list length mismatch used to be
+    silently truncated by the unstrict zip in ``BurstModel.time``, dropping
+    ports from the max and under-reporting transfer time.  Construction now
+    validates, and the zips are strict."""
+    kw = dict(scheme="cfa", n_ports=2, strategy="facet-lpt",
+              read_useful=4, write_useful=4)
+    with pytest.raises(ValueError, match="read_runs_by_port"):
+        PortedPlan(read_runs_by_port=((4,),),  # 1 entry, n_ports=2
+                   write_runs_by_port=((4,), (4,)), **kw)
+    with pytest.raises(ValueError, match="write_runs_by_port"):
+        PortedPlan(read_runs_by_port=((4,), (4,)),
+                   write_runs_by_port=((4,), (4,), (4,)), **kw)
+    # even a plan corrupted after construction (bypassing __post_init__)
+    # must fail loudly in the model, not drop the trailing port
+    pp = PortedPlan(read_runs_by_port=((8,), (2,)),
+                    write_runs_by_port=((1,), (16,)), **kw)
+    object.__setattr__(pp, "read_runs_by_port", ((8,),))
+    with pytest.raises(ValueError):
+        AXI_ZC706.time(pp)
+    with pytest.raises(ValueError):
+        pp.port_elems
+
+
 def test_ported_time_is_max_over_ports():
     prog, space, tiling = _default_setup("jacobi2d5p")
     plan = cfa_plan(space, prog.deps, tiling)
@@ -202,6 +226,21 @@ def test_autotune_ports_cache_round_trip(tmp_path):
 # sharded wavefront executor == single-port oracle (acceptance criterion)
 # ---------------------------------------------------------------------------
 
+def test_sweep_wavefront_sharded_smoke():
+    """Fast tier-1 representative of the sharded executor: small problem,
+    waves of uneven size (so the padding path runs).  The full program
+    matrix below is `slow` and runs on the CI slow leg."""
+    prog = get_program("jacobi2d5p")
+    pipe = CFAPipeline(prog, IterSpace((4, 4, 4)), Tiling((4, 2, 2)))
+    rng = np.random.default_rng(0)
+    inputs = jnp.asarray(rng.normal(size=(1, 4, 4)))
+    ref = pipe.sweep(inputs, dtype=jnp.float64)
+    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
+    for k in ref:
+        assert (np.asarray(ref[k]) == np.asarray(got[k])).all(), f"facet {k}"
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "name,space,tile",
     [
@@ -210,11 +249,13 @@ def test_autotune_ports_cache_round_trip(tmp_path):
         ("jacobi2d9p-gol", (8, 8, 8), (4, 4, 4)),
         ("gaussian", (4, 16, 16), (2, 8, 8)),
         ("smith-waterman-3seq", (9, 8, 8), (3, 4, 4)),
+        ("heat1d", (12, 12), (4, 4)),
+        ("heat3d", (4, 4, 4, 4), (2, 2, 2, 2)),
     ],
 )
 def test_sweep_wavefront_sharded_bit_exact(name, space, tile):
-    """Every Table I program: the multi-port executor's facet storage is
-    bit-identical to the single-port ``sweep``'s."""
+    """Every program (Table I + the N-D additions): the multi-port
+    executor's facet storage is bit-identical to the single-port ``sweep``'s."""
     prog = get_program(name)
     pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
     w0 = pipe.specs[0].width
@@ -226,6 +267,7 @@ def test_sweep_wavefront_sharded_bit_exact(name, space, tile):
         assert (np.asarray(ref[k]) == np.asarray(got[k])).all(), f"facet {k}"
 
 
+@pytest.mark.slow
 def test_sweep_wavefront_sharded_pads_odd_waves():
     """3 ports over waves whose sizes are not multiples of 3 (padding path)."""
     prog = get_program("jacobi2d5p")

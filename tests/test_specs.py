@@ -83,6 +83,7 @@ _CELL_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_build_cell_compiles_on_small_mesh_subprocess():
     from conftest import multidevice_emulation_reason
 

@@ -1,9 +1,11 @@
 #!/usr/bin/env python
 """CI guard: every code symbol or path the docs reference must still exist.
 
-Scans the inline-backtick tokens of ``docs/*.md`` (and the results README)
-— fenced code blocks are shell/transcript examples and are skipped — and
-checks each against the repository:
+Scans the inline-backtick tokens of ``docs/*.md``, the top-level README
+(whose quickstart snippets name live API symbols, e.g. the N-D
+``heat1d``/``heat3d`` example) and the results README — fenced code blocks
+are shell/transcript examples and are skipped — and checks each against
+the repository:
 
 * tokens containing ``/`` or ending in a file suffix are treated as paths
   (globs allowed) and must match at least one file;
@@ -26,7 +28,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
 
-DEFAULT_DOCS = ("docs/*.md", "benchmarks/results/README.md")
+DEFAULT_DOCS = ("docs/*.md", "README.md", "benchmarks/results/README.md")
 
 # directories whose .py files make up the symbol corpus
 CODE_DIRS = ("src", "benchmarks", "tests", "tools", "examples")
