@@ -1,7 +1,8 @@
-"""Layout hillclimbing CLI — a thin front-end over ``repro.core.cfa.autotune``.
+"""Layout hillclimbing CLI — a thin front-end over ``repro.cfa.autotune``.
 
 The search itself (candidate tilings x extension directions x contiguity
-levels, scored by the BurstModel, persistently cached) lives in the library;
+levels, scored by the BurstModel, persistently cached) lives in the library
+(``repro.cfa.autotune``, which ``cfa.compile(layout="autotune")`` drives);
 this script only parses arguments, runs decisions, prints the ranked tables
 and writes one JSON per (program, model) to benchmarks/results/autotune/.
 
@@ -19,21 +20,24 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core.cfa import (
+from repro.cfa import (
     AXI_ZC706,
     TPU_V5E_HBM,
     IterSpace,
     PROGRAMS,
     autotune,
     get_program,
-    hand_coded_baselines,
 )
+from repro.core.cfa import hand_coded_baselines
 
 OUT = Path(__file__).parent / "results" / "autotune"
 MODELS = {m.name: m for m in (AXI_ZC706, TPU_V5E_HBM)}
 
 
 def run_one(name: str, space: tuple[int, ...], model, args) -> dict:
+    # decision-only search: cfa.autotune is the documented direct route
+    # (cfa.compile(layout="autotune") drives the same machinery when an
+    # executable stencil is wanted too)
     prog = get_program(name)
     decision = autotune(
         prog,

@@ -24,20 +24,20 @@ def table1_suite() -> None:
     """Table I: the benchmark suite runs end-to-end through facet storage."""
     import jax.numpy as jnp
     import numpy as np
-    from repro.core.cfa import CFAPipeline, IterSpace, Tiling, PROGRAMS
+    from repro import cfa
 
-    for name, prog in PROGRAMS.items():
+    for name, prog in cfa.PROGRAMS.items():
         t = tuple(min(x, 4) for x in prog.default_tile)
         space = tuple(2 * x for x in t)
-        pipe = CFAPipeline(prog, IterSpace(space), Tiling(t))
+        compiled = cfa.compile(prog, space, layout=t, backend="sweep")
         rng = np.random.default_rng(0)
-        inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])))
+        spec = compiled.pipeline.specs[0]
+        inputs = jnp.asarray(rng.normal(size=(spec.width, *space[1:])))
         t0 = time.perf_counter()
-        facets = pipe.sweep(inputs)
+        facets = compiled(inputs)
         us = 1e6 * (time.perf_counter() - t0)
-        V = pipe.reference_volume(inputs)
+        V = compiled.reference(inputs)
         from repro.core.cfa import pack_facet
-        spec = pipe.specs[0]
         ok = "n/a"
         if spec.tile_sizes[0] % spec.width == 0:
             want = pack_facet(V.astype(jnp.float32), spec)
@@ -115,14 +115,15 @@ def multiport() -> None:
 
 def autotune_table() -> None:
     """Layout autotuner: winning layout per benchmark vs the hand-coded plans."""
-    from repro.core.cfa import (AXI_ZC706, IterSpace, PROGRAMS, autotune,
-                                hand_coded_baselines)
+    from repro import cfa
+    from repro.core.cfa import IterSpace, hand_coded_baselines
 
     rows = []
-    for name, prog in PROGRAMS.items():
+    for name, prog in cfa.PROGRAMS.items():
         space = tuple(2 * t for t in prog.default_tile)
-        d = autotune(prog, space, AXI_ZC706, seed=0, budget=64)
-        base = hand_coded_baselines(prog, IterSpace(space), AXI_ZC706)
+        # decision-only: the front door's cfa.autotune, no executor needed
+        d = cfa.autotune(prog, space, cfa.AXI_ZC706, seed=0, budget=64)
+        base = hand_coded_baselines(prog, IterSpace(space), cfa.AXI_ZC706)
         gain = d.best.effective_bw / max(s.effective_bw for s in base.values())
         rows.append({
             "benchmark": name,

@@ -1,0 +1,94 @@
+"""``repro.cfa`` — the public front door to the CFA stack.
+
+One declarative entry point over layout search, burst planning and the
+execution backends:
+
+    from repro import cfa
+
+    compiled = cfa.compile("jacobi2d5p", (16, 32, 32))   # autotuned layout
+    facets   = compiled(inputs)                          # run it
+    print(compiled.report())                             # bandwidth stats
+    sharded  = cfa.compile("jacobi2d5p", (16, 32, 32), n_ports=4)
+
+Everything here re-exports from :mod:`repro.core.cfa`; the curated
+``__all__`` below *is* the public API surface — ``tests/test_api.py`` pins
+it with a snapshot test, so additions and removals are deliberate, reviewed
+events rather than accidents.  Lower-level machinery (point sets, packing,
+baseline plans, repartition strategies) stays importable from
+``repro.core.cfa`` for tooling and tests.
+"""
+from repro.core.cfa import (
+    # the front door
+    compile,
+    CompiledStencil,
+    # platform registry
+    Target,
+    TARGETS,
+    register_target,
+    get_target,
+    AXI_ZC706,
+    TPU_V5E_HBM,
+    # execution backends + the capability gate
+    Executor,
+    ExecutorCaps,
+    EXECUTORS,
+    register_executor,
+    get_executor,
+    available_backends,
+    select_backend,
+    BackendError,
+    # layout machinery a compile() caller sees
+    IterSpace,
+    Deps,
+    Tiling,
+    StencilProgram,
+    PROGRAMS,
+    get_program,
+    LayoutCandidate,
+    ScoredLayout,
+    LayoutDecision,
+    autotune,
+    CacheSchemaError,
+    # plans / bandwidth carried on CompiledStencil
+    TransferPlan,
+    BurstModel,
+    PortedPlan,
+    BandwidthReport,
+    # the underlying pipeline (CompiledStencil.pipeline)
+    CFAPipeline,
+)
+
+__all__ = [
+    "compile",
+    "CompiledStencil",
+    "Target",
+    "TARGETS",
+    "register_target",
+    "get_target",
+    "AXI_ZC706",
+    "TPU_V5E_HBM",
+    "Executor",
+    "ExecutorCaps",
+    "EXECUTORS",
+    "register_executor",
+    "get_executor",
+    "available_backends",
+    "select_backend",
+    "BackendError",
+    "IterSpace",
+    "Deps",
+    "Tiling",
+    "StencilProgram",
+    "PROGRAMS",
+    "get_program",
+    "LayoutCandidate",
+    "ScoredLayout",
+    "LayoutDecision",
+    "autotune",
+    "CacheSchemaError",
+    "TransferPlan",
+    "BurstModel",
+    "PortedPlan",
+    "BandwidthReport",
+    "CFAPipeline",
+]

@@ -73,6 +73,22 @@ Autotuner (``autotune``) — the §VI "which layout?" question made a subsystem
       space, the per-candidate score, and the ranked result (which carries
       the winning ``PortAssignment`` when ``n_ports > 1``).
     * ``candidate_tilings`` / ``hand_coded_baselines`` — enumeration helpers.
+    * ``CacheSchemaError`` — on-disk decision from another cache schema.
+
+Front-end (``api``/``executors``) — one declarative entry point over it all
+    * ``compile``          — layout search + planning + backend selection in
+      one call; returns a ``CompiledStencil`` (callable; carries ``.layout``,
+      ``.plan``, ``.report()``, ``.lower()``, ``.pipeline``).
+    * ``Target`` / ``TARGETS`` / ``register_target`` / ``get_target`` — the
+      platform registry (burst model + port budget).
+    * ``Executor`` / ``ExecutorCaps`` / ``EXECUTORS`` / ``register_executor``
+      / ``get_executor`` / ``available_backends`` / ``select_backend`` /
+      ``BackendError`` — the execution-backend registry and its single
+      capability gate (N-D and port-count validation).
+
+The legacy composite entry points (``CFAPipeline.from_autotuned``, the
+``sweep*`` drivers, the kernel ``*_from_autotuned`` wrappers) remain as thin
+shims that emit ``DeprecationWarning`` and delegate.
 """
 from .spaces import (
     IterSpace,
@@ -115,11 +131,30 @@ from .autotune import (
     LayoutCandidate,
     ScoredLayout,
     LayoutDecision,
+    CacheSchemaError,
     autotune,
     candidate_tilings,
     hand_coded_baselines,
 )
 from .transform import CFAPipeline
+from .executors import (
+    BackendError,
+    Executor,
+    ExecutorCaps,
+    EXECUTORS,
+    register_executor,
+    get_executor,
+    available_backends,
+    select_backend,
+)
+from .api import (
+    Target,
+    TARGETS,
+    register_target,
+    get_target,
+    compile,
+    CompiledStencil,
+)
 
 __all__ = [
     "IterSpace", "Deps", "Tiling", "facet_widths",
@@ -132,7 +167,11 @@ __all__ = [
     "PortAssignment", "PORT_STRATEGIES", "assign_ports",
     "repartition", "best_repartition", "port_speedup",
     "StencilProgram", "PROGRAMS", "get_program",
-    "LayoutCandidate", "ScoredLayout", "LayoutDecision",
+    "LayoutCandidate", "ScoredLayout", "LayoutDecision", "CacheSchemaError",
     "autotune", "candidate_tilings", "hand_coded_baselines",
     "CFAPipeline",
+    "BackendError", "Executor", "ExecutorCaps", "EXECUTORS",
+    "register_executor", "get_executor", "available_backends", "select_backend",
+    "Target", "TARGETS", "register_target", "get_target",
+    "compile", "CompiledStencil",
 ]

@@ -1,0 +1,312 @@
+"""``repro.cfa.compile`` — the jit-style front door over the CFA stack.
+
+The paper's pipeline (§V, Fig. 13) is one conceptual operation — pick a
+burst-friendly layout, build the read→execute→write schedule, run it — yet
+doing it by hand means wiring four subsystems (``get_program`` →
+``autotune`` → ``CFAPipeline`` → an executor entry point) with knobs
+duplicated at every step.  This module collapses that into
+
+    compiled = cfa.compile("jacobi2d5p", (16, 32, 32))
+    facets   = compiled(inputs)            # same payload as CFAPipeline.sweep
+    compiled.report()                      # BurstModel bandwidth stats
+    compiled.lower(backend="sharded")      # rebind to another backend
+
+``compile`` resolves the layout (autotune by default), validates the
+backend against its declared capabilities and the target's port budget
+(:mod:`repro.core.cfa.executors`), and returns a :class:`CompiledStencil` —
+a callable carrying the layout, the interior-tile transfer plan, the
+bandwidth report and the underlying :class:`CFAPipeline`.
+
+The :class:`Target` registry unifies the paper's ZC706 AXI port model, the
+TPU HBM adaptation and custom :class:`BurstModel`\\ s — including each
+platform's *port budget*, so ``n_ports`` is validated in one place instead
+of at five call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+
+from .autotune import LayoutCandidate, LayoutDecision, autotune
+from .bandwidth import AXI_ZC706, TPU_V5E_HBM, BandwidthReport, BurstModel
+from .multiport import best_repartition
+from .plans import TransferPlan
+from .programs import StencilProgram, get_program
+from .spaces import IterSpace, Tiling
+from .executors import (
+    Executor,
+    check_backend,
+    get_executor,
+    select_backend,
+)
+from .transform import CFAPipeline
+
+__all__ = [
+    "Target",
+    "TARGETS",
+    "register_target",
+    "get_target",
+    "compile",
+    "CompiledStencil",
+]
+
+
+# --------------------------------------------------------------------------
+# Target registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """A memory platform: a :class:`BurstModel` plus its port budget.
+
+    ``max_ports`` is how many independent memory ports the platform offers
+    (AXI HP ports on the ZC706, HBM channels on a TPU); ``None`` means
+    unvalidated (custom models).  ``compile`` rejects ``n_ports`` beyond the
+    budget — the §VII repartition cannot use ports the hardware lacks.
+    """
+
+    name: str
+    model: BurstModel
+    max_ports: int | None = None
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if self.max_ports is not None and self.max_ports < 1:
+            raise ValueError(f"max_ports must be >= 1: {self.max_ports}")
+
+
+TARGETS: dict[str, Target] = {}
+
+
+def register_target(target: Target, *, overwrite: bool = False) -> Target:
+    if not overwrite and target.name in TARGETS:
+        raise ValueError(f"target {target.name!r} is already registered")
+    TARGETS[target.name] = target
+    return target
+
+
+register_target(Target(
+    name="axi-zc706", model=AXI_ZC706, max_ports=4,
+    description="the paper's Zynq ZC706: 4 AXI HP ports, 800 MB/s each (§VI-A)",
+))
+register_target(Target(
+    name="tpu-v5e-hbm", model=TPU_V5E_HBM, max_ports=16,
+    description="TPU v5e-class HBM behind DMA engines (the adaptation target)",
+))
+
+
+def get_target(target: "Target | BurstModel | str") -> Target:
+    """Resolve a target name, a registered/raw :class:`BurstModel`, or a
+    :class:`Target` to the registry entry (raw models wrap unvalidated)."""
+    if isinstance(target, Target):
+        return target
+    if isinstance(target, BurstModel):
+        hit = TARGETS.get(target.name)
+        if hit is not None:
+            if hit.model == target:
+                return hit
+            # a recalibrated model of a registered platform (same name,
+            # tweaked parameters) keeps that platform's port budget — the
+            # hardware did not grow ports because the model was re-fit
+            return dataclasses.replace(hit, model=target)
+        return Target(name=target.name, model=target)
+    if isinstance(target, str):
+        try:
+            return TARGETS[target]
+        except KeyError:
+            raise ValueError(
+                f"unknown target {target!r}; registered: {sorted(TARGETS)}"
+            ) from None
+    raise TypeError(f"target must be a Target, BurstModel or name: {target!r}")
+
+
+# --------------------------------------------------------------------------
+# CompiledStencil
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledStencil:
+    """The result of :func:`compile`: a callable stencil executable.
+
+    ``compiled(inputs)`` runs the tiled computation through facet storage on
+    the bound backend and returns the facet dict — the exact payload of
+    ``CFAPipeline.sweep``, bit-identical across backends.  The layout, the
+    interior-tile :class:`TransferPlan`, the modeled bandwidth
+    (:meth:`report`) and the underlying :class:`CFAPipeline` ride along.
+    """
+
+    program: StencilProgram
+    space: IterSpace
+    target: Target
+    n_ports: int
+    executor: Executor
+    pipeline: CFAPipeline
+    layout: LayoutCandidate
+    decision: LayoutDecision | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def backend(self) -> str:
+        return self.executor.name
+
+    def __call__(self, inputs: jnp.ndarray, *, dtype=jnp.float32,
+                 **opts) -> dict[int, jnp.ndarray]:
+        """Run the stencil: live-in planes (w0, N1, ..) → facet storage.
+
+        ``opts`` pass through to the backend (e.g. ``interpret=False`` for
+        the Pallas kernels on a real TPU, ``use_kernel=True`` /
+        ``mesh=...`` for the sharded backend)."""
+        return self.executor.execute(
+            self.pipeline, jnp.asarray(inputs),
+            dtype=dtype, n_ports=self.n_ports, **opts,
+        )
+
+    @functools.cached_property
+    def plan(self) -> TransferPlan:
+        """The layout's interior-tile burst schedule (§V-C), computed once
+        (the burst-run enumeration is exact, hence not free)."""
+        return self.layout.plan(self.space, self.program)
+
+    def report(self, model: BurstModel | None = None) -> BandwidthReport:
+        """Modeled raw/effective bandwidth of one interior tile under the
+        target's burst model (or ``model``); with ``n_ports > 1`` the plan
+        is first repartitioned over the ports (best strategy, §VII)."""
+        m = model if model is not None else self.target.model
+        plan = self.plan
+        if self.n_ports > 1:
+            plan = best_repartition(plan, self.n_ports, m)
+        return BandwidthReport.evaluate(plan, m)
+
+    def lower(self, backend: str) -> "CompiledStencil":
+        """Rebind to another backend (re-validated), jit's ``lower`` spirit:
+        same program, space, layout and target — different executor."""
+        ex = get_executor(backend)
+        check_backend(ex, self.program, self.space, self.n_ports)
+        return dataclasses.replace(self, executor=ex)
+
+    def reference(self, inputs: jnp.ndarray) -> jnp.ndarray:
+        """The untiled oracle volume (``CFAPipeline.reference_volume``)."""
+        return self.pipeline.reference_volume(jnp.asarray(inputs))
+
+    def describe(self) -> str:
+        """One-paragraph human summary (layout, backend, modeled bw)."""
+        r = self.report()
+        ports = f" x{self.n_ports} ports" if self.n_ports > 1 else ""
+        return (
+            f"{self.program.name} @ {self.space.sizes} -> "
+            f"layout {self.layout.key}, backend {self.backend}, "
+            f"target {self.target.name}{ports}: "
+            f"{r.n_bursts} bursts/tile, redundancy {r.redundancy:.1%}, "
+            f"effective bw {r.peak_fraction_effective:.1%} of one port's peak"
+        )
+
+
+# --------------------------------------------------------------------------
+# compile
+# --------------------------------------------------------------------------
+
+
+def _resolve_layout(
+    layout,
+    program: StencilProgram,
+    space: IterSpace,
+    target: Target,
+    n_ports: int,
+    autotune_kwargs: Mapping | None,
+) -> tuple[LayoutCandidate, LayoutDecision | None]:
+    if isinstance(layout, str):
+        if layout == "autotune":
+            decision = autotune(program, space, target.model,
+                                n_ports=n_ports, **dict(autotune_kwargs or {}))
+            return decision.best_cfa().candidate, decision
+        if layout == "default":
+            return LayoutCandidate("cfa", program.default_tile,
+                                   contiguity="intra-tile"), None
+        raise ValueError(
+            f"layout must be 'autotune', 'default', a LayoutCandidate, a "
+            f"LayoutDecision or a tile tuple; got {layout!r}"
+        )
+    if isinstance(layout, LayoutCandidate):
+        if layout.scheme != "cfa":
+            raise ValueError(
+                f"only 'cfa'-scheme layouts are executable (facet storage); "
+                f"got scheme {layout.scheme!r} — the baseline schemes exist "
+                f"for plan/bandwidth comparison only"
+            )
+        return layout, None
+    if isinstance(layout, LayoutDecision):
+        if layout.program != program.name or tuple(layout.space) != space.sizes:
+            raise ValueError(
+                f"decision is for {layout.program!r} @ {tuple(layout.space)}, "
+                f"not {program.name!r} @ {space.sizes}"
+            )
+        return layout.best_cfa().candidate, layout
+    if isinstance(layout, Sequence):
+        return LayoutCandidate("cfa", tuple(int(t) for t in layout),
+                               contiguity="intra-tile"), None
+    raise TypeError(f"cannot interpret layout {layout!r}")
+
+
+def compile(
+    program: StencilProgram | str,
+    space: IterSpace | Sequence[int],
+    *,
+    target: Target | BurstModel | str = AXI_ZC706,
+    n_ports: int = 1,
+    layout: "str | LayoutCandidate | LayoutDecision | Sequence[int]" = "autotune",
+    backend: str = "auto",
+    autotune_kwargs: Mapping | None = None,
+) -> CompiledStencil:
+    """Compile ``program`` on ``space`` into an executable stencil.
+
+    * ``target`` — a :class:`Target` (or registered name / BurstModel):
+      the burst model scoring layouts plus the platform's port budget.
+    * ``n_ports`` — memory ports to repartition facets over (§VII);
+      validated against ``target.max_ports`` and the backend's capability.
+    * ``layout`` — ``"autotune"`` (default: search the layout family under
+      the target's model, co-tuned with the port repartition),
+      ``"default"`` (the paper's layout at the program's default tile), a
+      :class:`LayoutCandidate`, a previous :class:`LayoutDecision`, or a
+      bare tile tuple (the paper's layout at that tile).
+    * ``backend`` — a registered executor name, or ``"auto"``
+      (:func:`repro.core.cfa.executors.select_backend`: sharded when
+      ``n_ports > 1``, pallas on 3-D, wavefront otherwise).
+    * ``autotune_kwargs`` — passed through to :func:`autotune` when
+      ``layout="autotune"`` (``seed``, ``budget``, ``cache_dir``, ...).
+    """
+    prog = get_program(program) if isinstance(program, str) else program
+    sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
+    if prog.ndim != sp.ndim:
+        raise ValueError(
+            f"program {prog.name!r} is {prog.ndim}-D but the space "
+            f"{sp.sizes} is {sp.ndim}-D"
+        )
+    tgt = get_target(target)
+    if n_ports < 1:
+        raise ValueError(f"n_ports must be >= 1: {n_ports}")
+    if tgt.max_ports is not None and n_ports > tgt.max_ports:
+        raise ValueError(
+            f"target {tgt.name!r} has {tgt.max_ports} memory port(s); "
+            f"n_ports={n_ports} exceeds the platform budget"
+        )
+
+    name = select_backend(prog, sp, n_ports) if backend == "auto" else backend
+    ex = get_executor(name)
+    check_backend(ex, prog, sp, n_ports)
+
+    cand, decision = _resolve_layout(layout, prog, sp, tgt, n_ports,
+                                     autotune_kwargs)
+    pipeline = CFAPipeline(
+        prog, sp, Tiling(cand.tile),
+        ext_dirs=cand.ext_dirs,
+        contiguity=cand.contiguity or "intra-tile",
+        decision=decision,
+    )
+    return CompiledStencil(
+        program=prog, space=sp, target=tgt, n_ports=n_ports,
+        executor=ex, pipeline=pipeline, layout=cand, decision=decision,
+    )

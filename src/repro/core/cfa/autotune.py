@@ -34,6 +34,7 @@ import json
 import math
 import os
 import tempfile
+import warnings
 from pathlib import Path
 from typing import Sequence
 
@@ -57,6 +58,7 @@ __all__ = [
     "LayoutCandidate",
     "ScoredLayout",
     "LayoutDecision",
+    "CacheSchemaError",
     "autotune",
     "candidate_tilings",
     "hand_coded_baselines",
@@ -64,9 +66,17 @@ __all__ = [
     "clear_cache",
 ]
 
+# v3: the cache key folds in the registered executor-backend capability
+# set (next to the target model identity it already carried), so decisions
+# re-search when the backend envelope changes; older schemas are rejected
+# loudly (CacheSchemaError -> warning) instead of silently deserializing.
 # v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
-# and the decision-level n_ports; v1 caches are rejected and re-searched.
-_CACHE_VERSION = 2
+# and the decision-level n_ports.
+_CACHE_VERSION = 3
+
+
+class CacheSchemaError(ValueError):
+    """An on-disk autotune decision uses a different cache schema version."""
 
 
 # --------------------------------------------------------------------------
@@ -311,8 +321,14 @@ class LayoutDecision:
     @staticmethod
     def from_json(text: str) -> "LayoutDecision":
         d = json.loads(text)
-        if d.pop("version", None) != _CACHE_VERSION:
-            raise ValueError("autotune cache version mismatch")
+        version = d.pop("version", None)
+        if version != _CACHE_VERSION:
+            raise CacheSchemaError(
+                f"autotune cache schema v{version}, need v{_CACHE_VERSION} "
+                f"(v3 records the target and the backend capability set in "
+                f"the key); delete the stale file or clear_cache() to "
+                f"re-search"
+            )
         ranked = []
         for s in d.pop("ranked"):
             c = s.pop("candidate")
@@ -482,12 +498,18 @@ def _cache_key(
     n_ports: int,
     port_strategies: Sequence[str],
 ) -> str:
+    from .executors import capability_fingerprint
+
     blob = json.dumps(
         {
             "version": _CACHE_VERSION,
             "program": program.name,
             "deps": list(map(list, program.deps.vectors)),
             "space": list(space.sizes),
+            # the executor capability set (schema v3): a decision is only
+            # reusable on the backend envelope it was searched for; the
+            # "model" entry below is the target identity (name + parameters)
+            "backends": capability_fingerprint(),
             "model": [model.name, model.peak_bytes_per_s, model.setup_s, model.elem_bytes],
             "seed": seed,
             "budget": budget,
@@ -505,8 +527,21 @@ def _cache_key(
 
 def _cache_load(path: Path) -> LayoutDecision | None:
     try:
-        return LayoutDecision.from_json(path.read_text())
-    except (OSError, ValueError, KeyError, TypeError):
+        text = path.read_text()
+    except OSError:
+        return None  # no cache entry for this key
+    try:
+        return LayoutDecision.from_json(text)
+    except CacheSchemaError as e:
+        # an old-schema decision under this key must not be silently
+        # deserialized OR silently dropped: say why a re-search happens
+        warnings.warn(f"ignoring {path}: {e}", RuntimeWarning, stacklevel=3)
+        return None
+    except (ValueError, KeyError, TypeError) as e:
+        warnings.warn(
+            f"ignoring corrupt autotune cache entry {path}: {e!r}",
+            RuntimeWarning, stacklevel=3,
+        )
         return None
 
 

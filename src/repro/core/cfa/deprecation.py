@@ -1,0 +1,23 @@
+"""Deprecation plumbing for the legacy composite entry points.
+
+``repro.cfa.compile`` is the one front door; the pre-existing drivers
+(``CFAPipeline.from_autotuned`` / ``sweep`` / ``sweep_wavefront`` /
+``sweep_wavefront_sharded`` and the kernel ``*_from_autotuned`` wrappers)
+remain as shims that call :func:`warn_deprecated` and delegate to the same
+internals the registered executors use.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["warn_deprecated"]
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit the legacy-entry-point deprecation warning, attributed to the
+    shim's caller."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} (see repro.cfa.compile)",
+        DeprecationWarning,
+        stacklevel=3,
+    )

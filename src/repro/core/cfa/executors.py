@@ -1,0 +1,308 @@
+"""Execution backends behind ``repro.cfa.compile`` — one registry, one gate.
+
+Before this module, running a compiled stencil meant picking one of five
+hand-wired entry points (``CFAPipeline.sweep`` / ``sweep_wavefront`` /
+``sweep_wavefront(use_kernel=True)`` / ``sweep_wavefront_sharded`` / the
+kernel ``*_from_autotuned`` wrappers), each with its own dimensionality and
+port-count restrictions enforced — or not — at a different layer.  Here the
+same executors are registered objects with *declared* capabilities, so
+backend selection, N-D gating and port-count validation happen in exactly
+one place (:func:`check_backend` / :func:`select_backend`).
+
+Registered backends (all return the same payload as ``CFAPipeline.sweep``:
+the facet-storage dict, bit-exact across backends):
+
+* ``reference`` — untiled oracle (``reference_volume``) scattered into facet
+  storage; the ground truth everything else is compared against.
+* ``sweep``     — the tile-by-tile reference loop of §V (Fig. 13).
+* ``wavefront`` — anti-diagonal waves of independent tiles, batched (jnp).
+* ``pallas``    — wavefront sweep through the Pallas tile-executor kernel
+  (``repro.kernels.stencil``), paired with the ``facet_fetch`` read engine's
+  layout family; declared 3-D only — the paper's kernel configuration.
+* ``sharded``   — port-mesh wavefront: facet arrays resident on their
+  assigned port's device, waves executed via ``shard_map`` (§VII).
+
+Custom backends register through :func:`register_executor`; the autotuner's
+cache key folds :func:`capability_fingerprint` in, so decisions re-search
+when the executor capability set changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from .programs import StencilProgram
+from .spaces import IterSpace
+from .transform import CFAPipeline
+
+__all__ = [
+    "BackendError",
+    "Executor",
+    "ExecutorCaps",
+    "EXECUTORS",
+    "register_executor",
+    "get_executor",
+    "available_backends",
+    "select_backend",
+    "check_backend",
+    "capability_fingerprint",
+]
+
+
+class BackendError(ValueError):
+    """A backend cannot execute the requested (program, space, n_ports)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorCaps:
+    """Declared capabilities of an execution backend.
+
+    ``ndims`` — iteration-space dimensionalities the backend can execute
+    (``None`` = any d >= 2, the ``CFAPipeline`` contract).
+    ``multiport`` — whether the backend realises an ``n_ports > 1`` facet
+    repartition (anything else requires ``n_ports == 1``).
+    ``kernels`` — whether the backend drives the Pallas kernels (so callers
+    know an ``interpret=`` knob applies).
+    """
+
+    ndims: tuple[int, ...] | None = None
+    multiport: bool = False
+    kernels: bool = False
+    description: str = ""
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """An execution backend: runs a built pipeline over concrete inputs.
+
+    ``execute`` consumes the live-in planes and returns the facet-storage
+    dict — the exact payload of ``CFAPipeline.sweep`` — so results from any
+    backend compare bit-for-bit.
+    """
+
+    name: str
+    caps: ExecutorCaps
+
+    def execute(
+        self,
+        pipeline: CFAPipeline,
+        inputs: jnp.ndarray,
+        *,
+        dtype=jnp.float32,
+        n_ports: int = 1,
+        **opts,
+    ) -> dict[int, jnp.ndarray]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class _FnExecutor:
+    """An Executor wrapping a plain function (the built-in backends).
+
+    ``opts_allowed`` is the backend's call-option surface; anything else is
+    rejected loudly — an ignored ``interpret=False`` on a backend that has
+    no kernels (or a typo'd option) must not run silently.
+    """
+
+    name: str
+    caps: ExecutorCaps
+    fn: Callable[..., dict[int, jnp.ndarray]]
+    opts_allowed: tuple[str, ...] = ()
+
+    def execute(self, pipeline, inputs, *, dtype=jnp.float32, n_ports=1, **opts):
+        unknown = sorted(set(opts) - set(self.opts_allowed))
+        if unknown:
+            raise TypeError(
+                f"backend {self.name!r} does not accept option(s) {unknown}; "
+                f"allowed: {sorted(self.opts_allowed) or 'none'}"
+            )
+        return self.fn(pipeline, inputs, dtype=dtype, n_ports=n_ports, **opts)
+
+
+# --------------------------------------------------------------------------
+# Built-in backends
+# --------------------------------------------------------------------------
+
+
+def _reference(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1):
+    """Untiled oracle scattered into facet storage.
+
+    ``reference_volume`` computes every plane over the full space; the
+    volume's tile blocks are then committed through the very same
+    ``copy_out`` the tiled executors use (``copy_out`` only reads the halo
+    buffer's interior), so the returned facets are directly comparable."""
+    inputs = inputs.astype(dtype)
+    V = pipeline.reference_volume(inputs).astype(dtype)
+    facets = pipeline.init_facets(dtype)
+    facets = pipeline.load_inputs(facets, inputs)
+    w = pipeline.widths
+    t = pipeline.tiling.sizes
+    interior = pipeline._interior_slices(w)
+    for tile in itertools.product(*(range(n) for n in pipeline.num_tiles)):
+        block = V[tuple(slice(q * ta, (q + 1) * ta) for q, ta in zip(tile, t))]
+        H = jnp.zeros(tuple(wa + ta for wa, ta in zip(w, t)), dtype)
+        H = H.at[interior].set(block)
+        facets = pipeline.copy_out(facets, tile, H)
+    return facets
+
+
+def _sweep(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1):
+    return pipeline._sweep(inputs, dtype)
+
+
+def _wavefront(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1):
+    return pipeline._sweep_wavefront(inputs, dtype, use_kernel=False)
+
+
+def _pallas(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1,
+            interpret: bool = True):
+    # interpret=True is the CPU-hosted mode; on a real TPU pass
+    # interpret=False through ``CompiledStencil.__call__``.
+    return pipeline._sweep_wavefront(inputs, dtype, use_kernel=True,
+                                     interpret=interpret)
+
+
+def _sharded(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1, **opts):
+    return pipeline._sweep_wavefront_sharded(inputs, dtype, n_ports=n_ports,
+                                             **opts)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+EXECUTORS: dict[str, Executor] = {}
+
+
+def register_executor(executor: Executor, *, overwrite: bool = False) -> Executor:
+    """Register a backend under ``executor.name`` (also usable on custom
+    Executor objects from outside this module)."""
+    if not overwrite and executor.name in EXECUTORS:
+        raise ValueError(f"backend {executor.name!r} is already registered")
+    EXECUTORS[executor.name] = executor
+    return executor
+
+
+def get_executor(name: str) -> Executor:
+    try:
+        return EXECUTORS[name]
+    except KeyError:
+        raise BackendError(
+            f"unknown backend {name!r}; registered: {sorted(EXECUTORS)}"
+        ) from None
+
+
+register_executor(_FnExecutor(
+    "reference",
+    ExecutorCaps(description="untiled oracle, scattered into facet storage"),
+    _reference,
+))
+register_executor(_FnExecutor(
+    "sweep",
+    ExecutorCaps(description="tile-by-tile reference loop (paper §V)"),
+    _sweep,
+))
+register_executor(_FnExecutor(
+    "wavefront",
+    ExecutorCaps(description="batched anti-diagonal tile waves (jnp)"),
+    _wavefront,
+))
+register_executor(_FnExecutor(
+    "pallas",
+    ExecutorCaps(ndims=(3,), kernels=True,
+                 description="wavefront sweep through the Pallas tile "
+                             "executor (facet_fetch/stencil kernel family, "
+                             "3-D only)"),
+    _pallas,
+    opts_allowed=("interpret",),
+))
+register_executor(_FnExecutor(
+    "sharded",
+    ExecutorCaps(multiport=True,
+                 description="port-mesh wavefront via shard_map (§VII)"),
+    _sharded,
+    opts_allowed=("mesh", "axis", "assignment", "use_kernel"),
+))
+
+
+# --------------------------------------------------------------------------
+# The one gate: capability validation + auto-selection
+# --------------------------------------------------------------------------
+
+
+def _ineligible_reason(
+    executor: Executor,
+    program: StencilProgram,
+    space: IterSpace,
+    n_ports: int,
+) -> str | None:
+    """Why this backend cannot run (program, space, n_ports); None if it can."""
+    caps = executor.caps
+    if caps.ndims is not None and space.ndim not in caps.ndims:
+        return (
+            f"backend {executor.name!r} executes "
+            f"{'/'.join(f'{n}-D' for n in caps.ndims)} spaces only, but "
+            f"{program.name!r} @ {space.sizes} is {space.ndim}-D"
+        )
+    if n_ports > 1 and not caps.multiport:
+        return f"backend {executor.name!r} is single-port, got n_ports={n_ports}"
+    return None
+
+
+def check_backend(
+    executor: Executor,
+    program: StencilProgram,
+    space: IterSpace,
+    n_ports: int = 1,
+) -> None:
+    """Validate (program, space, n_ports) against the backend's declared
+    capabilities; raises :class:`BackendError` with the eligible
+    alternatives spelled out."""
+    reason = _ineligible_reason(executor, program, space, n_ports)
+    if reason is not None:
+        raise BackendError(
+            f"{reason}; eligible backends: "
+            f"{available_backends(program, space, n_ports)}"
+        )
+
+
+def available_backends(
+    program: StencilProgram, space: IterSpace, n_ports: int = 1
+) -> list[str]:
+    """Names of registered backends able to run (program, space, n_ports)."""
+    return [
+        name for name, ex in EXECUTORS.items()
+        if _ineligible_reason(ex, program, space, n_ports) is None
+    ]
+
+
+def select_backend(
+    program: StencilProgram, space: IterSpace, n_ports: int = 1
+) -> str:
+    """The ``backend="auto"`` rule, in one place:
+
+    1. ``n_ports > 1``  →  ``sharded``   (the only multiport backend);
+    2. 3-D spaces       →  ``pallas``    (the paper's kernel configuration);
+    3. anything else    →  ``wavefront`` (dimension-generic, batched).
+    """
+    if n_ports > 1:
+        return "sharded"
+    if space.ndim == 3:
+        return "pallas"
+    return "wavefront"
+
+
+def capability_fingerprint() -> list[list]:
+    """Stable summary of the registered backend capability set.
+
+    Folded into the autotune cache key (schema v3): a decision computed when
+    e.g. the ``pallas`` backend was 3-D-only must not be silently reused
+    after a backend's capability envelope changes.
+    """
+    return [
+        [name, list(ex.caps.ndims) if ex.caps.ndims is not None else None,
+         ex.caps.multiport, ex.caps.kernels]
+        for name, ex in sorted(EXECUTORS.items())
+    ]

@@ -34,6 +34,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .deprecation import warn_deprecated as _deprecated
 from .facets import FacetSpec, build_facet_specs
 from .programs import StencilProgram
 from .spaces import IterSpace, Tiling, box_points
@@ -87,6 +88,10 @@ class CFAPipeline:
     ) -> "CFAPipeline":
         """Build the pipeline from the autotuner's winning CFA layout.
 
+        .. deprecated:: use ``repro.cfa.compile(program, space,
+           layout="autotune")`` — same search, plus backend selection and
+           port validation in one place.
+
         Runs ``repro.core.cfa.autotune.autotune`` (or reuses ``decision``)
         and instantiates the pipeline at the best CFA candidate's tile sizes,
         extension directions and contiguity level.  ``kernel_compatible``
@@ -95,6 +100,8 @@ class CFAPipeline:
         Extra keyword arguments (seed, budget, cache_dir, ...) pass through
         to ``autotune``.
         """
+        _deprecated("CFAPipeline.from_autotuned",
+                    'repro.cfa.compile(..., layout="autotune")')
         from .autotune import autotune
         from .bandwidth import AXI_ZC706
         from .programs import get_program
@@ -318,7 +325,15 @@ class CFAPipeline:
     # -- full sweep ----------------------------------------------------------------
 
     def sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
-        """Run the whole tiled computation through facet storage."""
+        """Run the whole tiled computation through facet storage.
+
+        .. deprecated:: use ``repro.cfa.compile(..., backend="sweep")``.
+        """
+        _deprecated("CFAPipeline.sweep",
+                    'repro.cfa.compile(..., backend="sweep")')
+        return self._sweep(inputs, dtype)
+
+    def _sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
         for tile in itertools.product(*(range(n) for n in self.num_tiles)):
@@ -344,7 +359,18 @@ class CFAPipeline:
     def sweep_wavefront(self, inputs: jnp.ndarray, dtype=jnp.float32,
                         use_kernel: bool = False) -> dict[int, jnp.ndarray]:
         """Wavefront-parallel sweep: each wave's tiles execute as one batch
-        (through the Pallas tile executor when ``use_kernel``)."""
+        (through the Pallas tile executor when ``use_kernel``).
+
+        .. deprecated:: use ``repro.cfa.compile(..., backend="wavefront")``
+           (or ``backend="pallas"`` for the kernel path).
+        """
+        _deprecated("CFAPipeline.sweep_wavefront",
+                    'repro.cfa.compile(..., backend="wavefront" | "pallas")')
+        return self._sweep_wavefront(inputs, dtype, use_kernel=use_kernel)
+
+    def _sweep_wavefront(self, inputs: jnp.ndarray, dtype=jnp.float32,
+                         use_kernel: bool = False,
+                         interpret: bool = True) -> dict[int, jnp.ndarray]:
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
         interior = self._interior_slices(self.widths)
@@ -354,7 +380,8 @@ class CFAPipeline:
                 from repro.kernels.stencil import execute_tiles
 
                 interiors = execute_tiles(self.program.name, halos,
-                                          self.tiling.sizes, interpret=True)
+                                          self.tiling.sizes,
+                                          interpret=interpret)
                 outs = []
                 for i in range(len(wave)):
                     H = halos[i].at[interior].set(interiors[i])
@@ -382,6 +409,9 @@ class CFAPipeline:
         per the port repartition, anti-diagonal tile waves executed in
         parallel via ``shard_map`` (paper §VII made an execution path).
 
+        .. deprecated:: use ``repro.cfa.compile(..., backend="sharded",
+           n_ports=...)``.
+
         * the facet arrays are placed on their assigned port's device
           (``repro.distributed.sharding.shard_facets``; the facet array is the
           unit of contiguity, so facet-granular repartition == whole-array
@@ -399,6 +429,24 @@ class CFAPipeline:
         shard_map batching change *where* tiles run, never the plane
         arithmetic or the order facet blocks are committed.
         """
+        _deprecated("CFAPipeline.sweep_wavefront_sharded",
+                    'repro.cfa.compile(..., backend="sharded", n_ports=...)')
+        return self._sweep_wavefront_sharded(
+            inputs, dtype, n_ports=n_ports, mesh=mesh, axis=axis,
+            assignment=assignment, use_kernel=use_kernel,
+        )
+
+    def _sweep_wavefront_sharded(
+        self,
+        inputs: jnp.ndarray,
+        dtype=jnp.float32,
+        *,
+        n_ports: int = 2,
+        mesh=None,
+        axis: str = "port",
+        assignment=None,
+        use_kernel: bool = False,
+    ) -> dict[int, jnp.ndarray]:
         from jax.sharding import NamedSharding
 
         from repro.core.cfa.multiport import assign_ports

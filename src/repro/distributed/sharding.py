@@ -218,6 +218,12 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True):
 def port_mesh(n_ports: int, axis: str = "port") -> Mesh:
     """1-D mesh standing in for ``n_ports`` memory ports.
 
+    This is the device fabric behind the ``sharded`` backend of
+    ``repro.cfa.compile`` (port-count validation against the *platform*
+    budget happens there, in the ``Target`` registry; this helper only
+    maps ports onto whatever devices exist — pass ``mesh=`` through the
+    compiled stencil's call options to supply a custom mesh instead).
+
     Uses up to ``n_ports`` local devices; with fewer devices than ports the
     mesh folds ports onto the available devices (port p -> device p mod size),
     so the same code runs on a laptop CPU, forced host devices, or a real

@@ -1,7 +1,14 @@
-"""Jit'd public wrappers for the CFA stencil tile executor."""
+"""Jit'd public wrappers for the CFA stencil tile executor.
+
+``execute_tiles`` / ``execute_tiles_sharded`` are the executor adapters the
+``pallas`` and ``sharded`` backends of ``repro.cfa.compile`` drive; the
+``*_from_autotuned`` wrapper is a deprecated shim kept for compatibility.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core.cfa.deprecation import warn_deprecated as _deprecated
 
 from .stencil import execute_tiles
 from .ref import execute_tiles_ref
@@ -40,6 +47,10 @@ def execute_tiles_from_autotuned(
 ) -> jnp.ndarray:
     """Execute tile batches at the tile size an autotuned LayoutDecision chose.
 
+    .. deprecated:: use ``repro.cfa.compile(..., layout=decision,
+       backend="pallas")`` — the compiled stencil gathers and executes at
+       the decision's winning tile in one call.
+
     ``decision`` is a ``repro.core.cfa.autotune.LayoutDecision`` (e.g. from
     ``CFAPipeline.from_autotuned(...).decision``); the halo batch must have
     been gathered at the decision's winning tile sizes.  When the halos came
@@ -47,6 +58,8 @@ def execute_tiles_from_autotuned(
     kernel-addressable layouts), pass ``kernel_compatible=True`` here too so
     both wrappers resolve the *same* candidate's tile.
     """
+    _deprecated("execute_tiles_from_autotuned",
+                'repro.cfa.compile(..., layout=decision, backend="pallas")')
     tile = tuple(decision.best_cfa(kernel_compatible=kernel_compatible).candidate.tile)
     return stencil_tile_op(program_name, halos, tile,
                            use_kernel=use_kernel, interpret=interpret)

@@ -72,9 +72,61 @@ def test_corrupt_cache_entry_recomputed(tmp_path):
     first = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
     for f in tmp_path.glob("*.json"):
         f.write_text("{not json")
-    redo = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        redo = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
     assert not redo.from_cache
     assert redo.ranked == first.ranked
+
+
+def test_old_cache_schema_rejected_loudly(tmp_path):
+    """Schema v3: an old-version decision under the current key warns and
+    re-searches instead of silently deserializing (or silently vanishing)."""
+    import json
+
+    from repro.core.cfa import CacheSchemaError
+
+    prog = PROGRAMS["jacobi2d5p"]
+    kw = dict(budget=16, seed=0, cache_dir=tmp_path)
+    first = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    (entry,) = tmp_path.glob("*.json")
+    blob = json.loads(entry.read_text())
+    blob["version"] = 2
+    entry.write_text(json.dumps(blob))
+    with pytest.raises(CacheSchemaError, match="schema v2"):
+        LayoutDecision.from_json(entry.read_text())
+    with pytest.warns(RuntimeWarning, match="schema v2"):
+        redo = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    assert not redo.from_cache
+    assert redo.ranked == first.ranked
+    # the re-search overwrote the stale entry: next call is a clean hit
+    hit = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    assert hit.from_cache
+
+
+def test_cache_key_records_backend_capability_set(tmp_path):
+    """Schema v3: the key folds the executor capability fingerprint in, so
+    a decision is not silently reused after the backend envelope changes."""
+    from repro.core.cfa.executors import (EXECUTORS, ExecutorCaps,
+                                          register_executor)
+
+    prog = PROGRAMS["jacobi2d5p"]
+    kw = dict(budget=16, seed=0, cache_dir=tmp_path)
+    autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
+
+    class _Dummy:
+        name = "test-dummy"
+        caps = ExecutorCaps(ndims=(3,), description="cache-key probe")
+
+        def execute(self, pipeline, inputs, **kw):  # pragma: no cover
+            raise NotImplementedError
+
+    register_executor(_Dummy())
+    try:
+        assert not autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
+    finally:
+        del EXECUTORS["test-dummy"]
+    assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,12 @@ the repository:
   at least one Python source file — so renaming or deleting a symbol without
   updating the docs fails CI.
 
+The check also runs in reverse for the public front-end surface: every name
+in ``repro.cfa.__all__`` (parsed statically from ``src/repro/cfa.py`` — no
+imports, so this works in the dependency-free docs CI job) must be
+mentioned, word-bounded, in at least one checked doc.  Adding a public
+symbol without documenting it fails CI just like documenting a deleted one.
+
 Exit status: 0 clean, 1 with a listing of stale references.
 
     python tools/check_doc_symbols.py            # check the default doc set
@@ -21,12 +27,16 @@ Exit status: 0 clean, 1 with a listing of stale references.
 """
 from __future__ import annotations
 
+import ast
 import glob
 import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+
+# the public front-end surface checked in reverse (docs must cover it)
+API_MODULE = ROOT / "src" / "repro" / "cfa.py"
 
 DEFAULT_DOCS = ("docs/*.md", "README.md", "benchmarks/results/README.md")
 
@@ -73,6 +83,33 @@ def _doc_tokens(path: Path) -> list[str]:
 
 def _is_path_token(tok: str) -> bool:
     return "/" in tok or tok.endswith(PATH_SUFFIXES)
+
+
+def _api_symbols() -> list[str]:
+    """``repro.cfa.__all__``, parsed statically (no repo imports needed)."""
+    if not API_MODULE.is_file():
+        return []
+    tree = ast.parse(API_MODULE.read_text())
+    for node in tree.body:
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target] if isinstance(node, ast.AnnAssign) else [])
+        if any(isinstance(t, ast.Name) and t.id == "__all__" for t in targets):
+            value = ast.literal_eval(node.value)
+            return [str(name) for name in value]
+    return []
+
+
+def check_api_coverage(files: list[Path]) -> list[str]:
+    """Every public front-end symbol must be mentioned in some checked doc."""
+    docs = "\n".join(f.read_text(errors="replace") for f in files)
+    missing = []
+    for name in _api_symbols():
+        if not re.search(rf"\b{re.escape(name)}\b", docs):
+            missing.append(
+                f"public API symbol `{name}` (repro.cfa.__all__) is not "
+                f"documented in any checked doc"
+            )
+    return missing
 
 
 def check(files: list[Path]) -> list[str]:
@@ -136,6 +173,8 @@ def main(argv: list[str]) -> int:
         print(f"no such doc file(s): {', '.join(map(str, missing))}")
         return 1
     stale = check(files)
+    if not argv:  # API coverage runs against the full default doc set only
+        stale += check_api_coverage(files)
     for s in stale:
         print(s)
     if stale:
