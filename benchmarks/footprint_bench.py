@@ -1,0 +1,227 @@
+"""Footprint/bandwidth trade-off curves for the facet storage disciplines.
+
+The paper's burst-friendly layout duplicates halo data (`TransferPlan.
+redundancy` measures the transfer tax; the storage tax is the facet arrays'
+footprint).  The Ferry-2024 follow-up removes the duplicates (irredundant
+storage) and compresses the blocks at a fixed ratio; this benchmark sweeps
+both axes over the Table I suite (+ `heat1d`/`heat3d`):
+
+* per (program, model): the interior-tile plan at the default tile under
+  ``redundant`` / ``irredundant`` / ``compressed`` (deltapack16 + deltapack8)
+  storage — footprint in elements and modeled bytes, per-tile stored slots,
+  burst counts, transfer redundancy, modeled time and effective bandwidth;
+* a trade-off curve: ``autotune(storage="irredundant",
+  footprint_weight=...)`` at several weights, recording each winner's
+  (footprint, effective-bandwidth) point — the knob a footprint-constrained
+  deployment turns.
+
+    PYTHONPATH=src python benchmarks/footprint_bench.py            # full suite
+    PYTHONPATH=src python benchmarks/footprint_bench.py --smoke    # CI leg
+    PYTHONPATH=src python benchmarks/footprint_bench.py \
+        --program heat3d --model axi-zc706 --weights 0 0.5 1
+
+Writes one JSON per model to benchmarks/results/footprint/ (schema in
+benchmarks/results/README.md); ``--smoke`` prints, asserts the headline
+invariants (storage redundancy 1.0, strictly smaller footprint, compressed
+bursts modeled faster, bit-exact execution) and writes nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.cfa import (
+    AXI_ZC706,
+    TPU_V5E_HBM,
+    BandwidthReport,
+    IterSpace,
+    PROGRAMS,
+    Tiling,
+    autotune,
+    build_facet_specs,
+    build_storage_map,
+    cfa_plan,
+    get_codec,
+    get_program,
+)
+
+OUT = Path(__file__).parent / "results" / "footprint"
+MODELS = {m.name: m for m in (AXI_ZC706, TPU_V5E_HBM)}
+#: (storage, codec) sweep points; codec only meaningful for "compressed".
+STORAGES = (
+    ("redundant", None),
+    ("irredundant", None),
+    ("compressed", "deltapack16"),
+    ("compressed", "deltapack8"),
+)
+DEFAULT_WEIGHTS = (0.0, 0.5, 1.0)
+
+
+def _footprint_bytes(smap, storage, codec, model) -> float:
+    """Resident bytes of the whole layout under a discipline: redundant
+    counts every slot, irredundant only owned slots, compressed packs each
+    facet's owned block at the codec's fixed ratio."""
+    elem_bits = 8 * model.elem_bytes
+    if storage == "redundant":
+        return smap.redundant_elems * model.elem_bytes
+    if storage == "irredundant" or codec is None:
+        return smap.stored_elems * model.elem_bytes
+    cdc = get_codec(codec)
+    bits = 0
+    for k, spec in smap.specs.items():
+        n_blocks = spec.size // spec.block_elems
+        bits += n_blocks * cdc.stored_bits(smap.owned_per_block[k], elem_bits)
+    return bits / 8
+
+
+def sweep_one(name: str, model, args) -> dict:
+    prog = get_program(name)
+    space = tuple(args.space) if args.space else tuple(
+        3 * t for t in prog.default_tile)
+    sp, tiling = IterSpace(space), Tiling(prog.default_tile)
+    specs = build_facet_specs(sp, prog.deps, tiling)
+    smap = build_storage_map(specs)
+
+    print(f"{name} @ space {space}  tile {prog.default_tile}  model={model.name}")
+    print(f"{'storage':>22} {'fp-elems':>9} {'fp-bytes':>10} {'bursts':>6} "
+          f"{'redun':>6} {'t_us':>8} {'eff':>7}")
+    rows = []
+    for storage, codec in STORAGES:
+        plan = cfa_plan(sp, prog.deps, tiling, storage=storage, codec=codec)
+        rep = BandwidthReport.evaluate(plan, model)
+        t_us = 1e6 * model.time(plan)
+        fp_bytes = _footprint_bytes(smap, storage, codec, model)
+        label = storage if codec is None else f"{storage}/{codec}"
+        rows.append({
+            "storage": storage,
+            "codec": codec,
+            "footprint_elems": plan.footprint,
+            "footprint_bytes": fp_bytes,
+            "stored_per_tile": plan.stored_elems,
+            "storage_redundancy": (1.0 if storage != "redundant"
+                                   else smap.redundant_elems / smap.stored_elems),
+            "n_bursts": plan.n_bursts,
+            "transfer_redundancy": plan.redundancy,
+            "t_us": t_us,
+            "eff_frac": rep.peak_fraction_effective,
+        })
+        print(f"{label:>22} {plan.footprint:>9} {fp_bytes:>10.0f} "
+              f"{plan.n_bursts:>6} {plan.redundancy:>6.1%} {t_us:>8.2f} "
+              f"{rep.peak_fraction_effective:>6.1%}")
+
+    curve = []
+    if not args.no_autotune:
+        for wgt in args.weights:
+            dec = autotune(prog, sp, model, budget=args.budget,
+                           storage="irredundant", footprint_weight=wgt,
+                           cache=not args.no_cache, cache_dir=args.cache_dir)
+            best = dec.best_cfa()
+            curve.append({
+                "footprint_weight": wgt,
+                "winner": best.candidate.key,
+                "footprint_elems": best.footprint,
+                "eff_frac": best.peak_fraction_effective,
+                "evaluated": dec.evaluated,
+            })
+            print(f"  weight {wgt:>4}: {best.candidate.key}  "
+                  f"footprint {best.footprint}  "
+                  f"eff {best.peak_fraction_effective:.1%}")
+    print()
+    return {
+        "program": name,
+        "space": list(space),
+        "tile": list(prog.default_tile),
+        "model": model.name,
+        "savings": smap.savings,
+        "storages": rows,
+        "tradeoff_curve": curve,
+    }
+
+
+def verify_exactness() -> None:
+    """Tiny end-to-end check for the CI smoke leg: the irredundant pipeline
+    is bit-exact against the redundant one (the full matrix lives in
+    tests/test_irredundant.py)."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro import cfa
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 8, 8)),
+                    jnp.float32)
+    red = cfa.compile("jacobi2d5p", (8, 8, 8), layout=(4, 4, 4),
+                      backend="sweep")(x)
+    irr = cfa.compile("jacobi2d5p", (8, 8, 8), layout=(4, 4, 4),
+                      backend="sweep", storage="irredundant")
+    rh = irr.rehydrate(irr(x))
+    for k in red:
+        assert (np.asarray(rh[k]) == np.asarray(red[k])).all(), f"facet {k}"
+    print("irredundant backend == redundant backend (bit-exact) "
+          "on jacobi2d5p 8^3")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--program", choices=sorted(PROGRAMS), default=None,
+                    help="one benchmark (default: the whole suite)")
+    ap.add_argument("--model", choices=sorted(MODELS), default=None,
+                    help="one preset (default: both)")
+    ap.add_argument("--space", type=int, nargs="+", default=None,
+                    help="iteration-space sizes (default: 3x the default tile)")
+    ap.add_argument("--weights", type=float, nargs="+",
+                    default=list(DEFAULT_WEIGHTS),
+                    help="footprint_weight points on the trade-off curve")
+    ap.add_argument("--budget", type=int, default=32,
+                    help="autotune evaluations per trade-off point")
+    ap.add_argument("--no-autotune", action="store_true",
+                    help="skip the trade-off curve")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: jacobi2d5p + heat3d, AXI, no files")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.model = args.model or "axi-zc706"
+        args.budget = min(args.budget, 16)
+        args.weights = [0.0, 1.0]
+
+    if args.smoke:
+        names = [args.program] if args.program else ["jacobi2d5p", "heat3d"]
+    else:
+        names = [args.program] if args.program else sorted(PROGRAMS)
+    models = [MODELS[args.model]] if args.model else [AXI_ZC706, TPU_V5E_HBM]
+
+    for model in models:
+        records = [sweep_one(name, model, args) for name in names]
+        if args.smoke:
+            # the acceptance headlines, kept honest on every CI run
+            for r in records:
+                by = {(row["storage"], row["codec"]): row
+                      for row in r["storages"]}
+                red = by[("redundant", None)]
+                irr = by[("irredundant", None)]
+                cmp16 = by[("compressed", "deltapack16")]
+                assert irr["storage_redundancy"] == 1.0, r["program"]
+                assert irr["footprint_elems"] < red["footprint_elems"], r["program"]
+                assert cmp16["t_us"] < irr["t_us"], r["program"]
+                assert cmp16["footprint_bytes"] < irr["footprint_bytes"], r["program"]
+            continue
+        OUT.mkdir(parents=True, exist_ok=True)
+        tag = args.program or "suite"
+        out = OUT / f"{tag}_{model.name}.json"
+        out.write_text(json.dumps(records, indent=1))
+        print(f"wrote {out}")
+
+    if args.smoke:
+        verify_exactness()
+        print("smoke OK: redundancy 1.0, smaller footprint, faster "
+              "compressed bursts on jacobi2d5p + heat3d")
+
+
+if __name__ == "__main__":
+    main()

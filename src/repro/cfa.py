@@ -9,6 +9,8 @@ execution backends:
     facets   = compiled(inputs)                          # run it
     print(compiled.report())                             # bandwidth stats
     sharded  = cfa.compile("jacobi2d5p", (16, 32, 32), n_ports=4)
+    dedup    = cfa.compile("jacobi2d5p", (16, 32, 32),   # Ferry-2024 storage
+                           storage="irredundant")
 
 Everything here re-exports from :mod:`repro.core.cfa`; the curated
 ``__all__`` below *is* the public API surface — ``tests/test_api.py`` pins
@@ -54,6 +56,15 @@ from repro.core.cfa import (
     BurstModel,
     PortedPlan,
     BandwidthReport,
+    # facet storage disciplines (compile(storage=...), Ferry 2024)
+    STORAGE_MODES,
+    StorageMap,
+    build_storage_map,
+    dedup_facets,
+    rehydrate_facets,
+    BlockCodec,
+    CODECS,
+    get_codec,
     # the underlying pipeline (CompiledStencil.pipeline)
     CFAPipeline,
 )
@@ -90,5 +101,13 @@ __all__ = [
     "BurstModel",
     "PortedPlan",
     "BandwidthReport",
+    "STORAGE_MODES",
+    "StorageMap",
+    "build_storage_map",
+    "dedup_facets",
+    "rehydrate_facets",
+    "BlockCodec",
+    "CODECS",
+    "get_codec",
     "CFAPipeline",
 ]

@@ -28,7 +28,24 @@ Facet layout (``facets``)
 
 Packing (``allocation``)
     * ``pack_facet`` / ``pack_all`` / ``unpack_into`` — canonical array <->
-      facet storage converters (§IV-F4 single-assignment allocation).
+      facet storage converters (§IV-F4 single-assignment allocation); both
+      understand the irredundant owned masks.
+
+Irredundant & compressed storage (``irredundant``/``compress``) — the
+Ferry-2024 follow-up layout as a first-class subsystem
+    * ``STORAGE_MODES``     — redundant / irredundant / compressed.
+    * ``owner_of``          — the deterministic ownership rule (lowest facet
+      axis wins a shared point).
+    * ``StorageMap`` / ``build_storage_map`` — per-facet owned masks +
+      footprint accounting (``stored_elems``, ``redundancy`` == 1.0,
+      ``savings``).
+    * ``dedup_facets`` / ``rehydrate_facets`` — drop / refill non-owned
+      slots (the bit-exactness bridge between disciplines).
+    * ``IrredundantPipeline`` / ``CompressedPipeline`` — ``CFAPipeline``
+      under owner-only commits and owner-resolved halo reads (+ fixed-ratio
+      codec round-trip).
+    * ``BlockCodec`` / ``CODECS`` / ``get_codec`` — XOR-delta bit-pack
+      block codecs (pure JAX, jit-compatible).
 
 Burst plans (``plans``)
     * ``TransferPlan``         — exact per-tile burst statistics (§V-C).
@@ -107,6 +124,17 @@ from .facets import (
     CONTIGUITY_LEVELS,
 )
 from .allocation import pack_facet, pack_all, unpack_into
+from .compress import BlockCodec, CODECS, get_codec
+from .irredundant import (
+    STORAGE_MODES,
+    StorageMap,
+    build_storage_map,
+    owner_of,
+    dedup_facets,
+    rehydrate_facets,
+    IrredundantPipeline,
+    CompressedPipeline,
+)
 from .plans import (
     TransferPlan,
     count_runs,
@@ -161,6 +189,10 @@ __all__ = [
     "flow_in_points", "flow_out_points", "facet_points", "neighbor_offsets",
     "FacetSpec", "build_facet_specs", "extension_dir", "CONTIGUITY_LEVELS",
     "pack_facet", "pack_all", "unpack_into",
+    "STORAGE_MODES", "StorageMap", "build_storage_map", "owner_of",
+    "dedup_facets", "rehydrate_facets",
+    "IrredundantPipeline", "CompressedPipeline",
+    "BlockCodec", "CODECS", "get_codec",
     "TransferPlan", "count_runs", "cfa_plan", "cfa_piece_census", "original_layout_plan",
     "bounding_box_plan", "data_tiling_plan", "interior_tile",
     "BurstModel", "PortedPlan", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",

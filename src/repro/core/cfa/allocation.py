@@ -7,6 +7,13 @@ and differentiate cleanly.  They exist for round-trip validation, for
 importing live-in data, and for exporting results — the execution pipeline
 itself (transform.py) writes facet blocks directly and never materialises the
 canonical volume.
+
+Both directions understand the irredundant storage discipline
+(``repro.core.cfa.irredundant``): ``pack_all(..., storage_map=...)`` zeroes
+the non-owned slots it would otherwise duplicate into, and
+``unpack_into(..., owned=...)`` scatters only owned slots — so a
+deduplicated payload round-trips without the dead zeros clobbering values
+another facet owns.
 """
 from __future__ import annotations
 
@@ -18,17 +25,27 @@ from .facets import FacetSpec
 __all__ = ["pack_facet", "pack_all", "unpack_into"]
 
 
-def _modulo_perm(spec: FacetSpec) -> np.ndarray:
-    """Map slab position j (0..w-1, i.e. x_k = t_k - w + j within the tile) to
-    the paper's modulo coordinate m = x_k mod w.  Requires w | t_k so the
-    labelling is tile-independent (always true for the Table I suite; the
-    sweep executor handles the general case tile-by-tile)."""
+def _check_packable(spec: FacetSpec) -> None:
+    """The pack/unpack legality gate: w | t_k, so the modulo labelling is
+    tile-independent.  Raised up front by every public entry point (not just
+    the ``_modulo_perm`` internals) so callers never pay partial reshape
+    work — or trip an unrelated reshape error — before the documented
+    ``ValueError``."""
     t_k, w = spec.tile_sizes[spec.axis], spec.width
     if t_k % w:
         raise ValueError(
             f"pack/unpack require w | t on axis {spec.axis} (t={t_k}, w={w}); "
             "use the sweep executor for tile-dependent modulo labelling"
         )
+
+
+def _modulo_perm(spec: FacetSpec) -> np.ndarray:
+    """Map slab position j (0..w-1, i.e. x_k = t_k - w + j within the tile) to
+    the paper's modulo coordinate m = x_k mod w.  Requires w | t_k so the
+    labelling is tile-independent (always true for the Table I suite; the
+    sweep executor handles the general case tile-by-tile)."""
+    _check_packable(spec)
+    t_k, w = spec.tile_sizes[spec.axis], spec.width
     return np.array([(t_k - w + j) % w for j in range(w)], dtype=np.int64)
 
 
@@ -42,6 +59,7 @@ def _interleaved(spec: FacetSpec, volume_shape: tuple[int, ...]) -> list[int]:
 
 def pack_facet(volume: jnp.ndarray, spec: FacetSpec) -> jnp.ndarray:
     """Extract facet array ``spec`` from a canonical value volume."""
+    _check_packable(spec)
     d = spec.ndim
     t_k, w, k = spec.tile_sizes[spec.axis], spec.width, spec.axis
     W = volume.reshape(_interleaved(spec, volume.shape))  # (q0, r0, q1, r1, ...)
@@ -55,12 +73,35 @@ def pack_facet(volume: jnp.ndarray, spec: FacetSpec) -> jnp.ndarray:
     return W.transpose(order)
 
 
-def pack_all(volume: jnp.ndarray, specs: dict[int, FacetSpec]) -> dict[int, jnp.ndarray]:
-    return {k: pack_facet(volume, s) for k, s in specs.items()}
+def pack_all(volume: jnp.ndarray, specs: dict[int, FacetSpec],
+             storage_map=None) -> dict[int, jnp.ndarray]:
+    """Pack every facet; with an irredundant ``storage_map``
+    (:class:`repro.core.cfa.irredundant.StorageMap`), non-owned slots are
+    zeroed — the exact payload an irredundant execution commits.
+
+    Validates w | t for *all* facets up front, so a mixed family fails with
+    the documented ``ValueError`` before any array is materialised.
+    """
+    for s in specs.values():
+        _check_packable(s)
+    packed = {k: pack_facet(volume, s) for k, s in specs.items()}
+    if storage_map is None:
+        return packed
+    from .irredundant import dedup_facets
+
+    return dedup_facets(packed, storage_map)
 
 
-def unpack_into(volume: jnp.ndarray, facet: jnp.ndarray, spec: FacetSpec) -> jnp.ndarray:
-    """Scatter a facet array's contents back into a canonical volume."""
+def unpack_into(volume: jnp.ndarray, facet: jnp.ndarray, spec: FacetSpec,
+                owned: np.ndarray | None = None) -> jnp.ndarray:
+    """Scatter a facet array's contents back into a canonical volume.
+
+    ``owned`` (the facet's mask from an irredundant
+    :class:`~repro.core.cfa.irredundant.StorageMap`, in block/inner-dims
+    order) restricts the scatter to owned slots, so a deduplicated facet's
+    dead zeros never clobber canonical points another facet owns.
+    """
+    _check_packable(spec)
     d = spec.ndim
     t_k, w, k = spec.tile_sizes[spec.axis], spec.width, spec.axis
     order = [2 * a for a in spec.outer_axes] + [2 * a + 1 for a in spec.inner_axes]
@@ -72,5 +113,13 @@ def unpack_into(volume: jnp.ndarray, facet: jnp.ndarray, spec: FacetSpec) -> jnp
     V = volume.reshape(_interleaved(spec, volume.shape))
     idx = [slice(None)] * (2 * d)
     idx[rdim] = slice(t_k - w, t_k)
+    if owned is not None:
+        # the mask lives in block (inner-dims) order and is constant along
+        # the modulo axis; route it through the same transpose/moveaxis as
+        # the data, then let the interleaved (q, r) dims broadcast over it
+        M = np.broadcast_to(np.asarray(owned, bool), facet.shape)
+        M = M.transpose(list(inv_order))
+        M = np.moveaxis(np.moveaxis(M, rdim, -1)[..., perm], -1, rdim)
+        W = jnp.where(jnp.asarray(M), W, V[tuple(idx)])
     V = V.at[tuple(idx)].set(W)
     return V.reshape(volume.shape)

@@ -32,6 +32,13 @@ import jax.numpy as jnp
 
 from .autotune import LayoutCandidate, LayoutDecision, autotune
 from .bandwidth import AXI_ZC706, TPU_V5E_HBM, BandwidthReport, BurstModel
+from .compress import BlockCodec, get_codec
+from .irredundant import (
+    STORAGE_MODES,
+    CompressedPipeline,
+    IrredundantPipeline,
+    rehydrate_facets,
+)
 from .multiport import best_repartition
 from .plans import TransferPlan
 from .programs import StencilProgram, get_program
@@ -148,10 +155,17 @@ class CompiledStencil:
     pipeline: CFAPipeline
     layout: LayoutCandidate
     decision: LayoutDecision | None = dataclasses.field(default=None, repr=False)
+    storage: str = "redundant"
+    codec: BlockCodec | None = None  # storage="compressed" only
 
     @property
     def backend(self) -> str:
         return self.executor.name
+
+    @property
+    def storage_map(self):
+        """The irredundant ownership map (``None`` under redundant storage)."""
+        return getattr(self.pipeline, "storage_map", None)
 
     def __call__(self, inputs: jnp.ndarray, *, dtype=jnp.float32,
                  **opts) -> dict[int, jnp.ndarray]:
@@ -167,9 +181,11 @@ class CompiledStencil:
 
     @functools.cached_property
     def plan(self) -> TransferPlan:
-        """The layout's interior-tile burst schedule (§V-C), computed once
-        (the burst-run enumeration is exact, hence not free)."""
-        return self.layout.plan(self.space, self.program)
+        """The layout's interior-tile burst schedule (§V-C) under the bound
+        storage discipline, computed once (the burst-run enumeration is
+        exact, hence not free)."""
+        return self.layout.plan(self.space, self.program,
+                                storage=self.storage, codec=self.codec)
 
     def report(self, model: BurstModel | None = None) -> BandwidthReport:
         """Modeled raw/effective bandwidth of one interior tile under the
@@ -183,22 +199,35 @@ class CompiledStencil:
 
     def lower(self, backend: str) -> "CompiledStencil":
         """Rebind to another backend (re-validated), jit's ``lower`` spirit:
-        same program, space, layout and target — different executor."""
+        same program, space, layout, storage and target — different
+        executor."""
         ex = get_executor(backend)
-        check_backend(ex, self.program, self.space, self.n_ports)
+        check_backend(ex, self.program, self.space, self.n_ports, self.storage)
         return dataclasses.replace(self, executor=ex)
 
     def reference(self, inputs: jnp.ndarray) -> jnp.ndarray:
         """The untiled oracle volume (``CFAPipeline.reference_volume``)."""
         return self.pipeline.reference_volume(jnp.asarray(inputs))
 
+    def rehydrate(self, facets: dict[int, jnp.ndarray]) -> dict[int, jnp.ndarray]:
+        """Refill non-owned facet slots from their owners, turning an
+        irredundant/compressed payload into the redundant layout's payload
+        (identity under ``storage="redundant"``) — the bit-exactness bridge
+        the acceptance tests compare across disciplines."""
+        if self.storage == "redundant":
+            return facets
+        return rehydrate_facets(facets, self.pipeline.storage_map)
+
     def describe(self) -> str:
-        """One-paragraph human summary (layout, backend, modeled bw)."""
+        """One-paragraph human summary (layout, storage, backend, bw)."""
         r = self.report()
         ports = f" x{self.n_ports} ports" if self.n_ports > 1 else ""
+        store = "" if self.storage == "redundant" else (
+            f", {self.storage} storage (footprint {r.footprint})"
+        )
         return (
             f"{self.program.name} @ {self.space.sizes} -> "
-            f"layout {self.layout.key}, backend {self.backend}, "
+            f"layout {self.layout.key}{store}, backend {self.backend}, "
             f"target {self.target.name}{ports}: "
             f"{r.n_bursts} bursts/tile, redundancy {r.redundancy:.1%}, "
             f"effective bw {r.peak_fraction_effective:.1%} of one port's peak"
@@ -216,12 +245,15 @@ def _resolve_layout(
     space: IterSpace,
     target: Target,
     n_ports: int,
+    storage: str,
+    codec: "BlockCodec | None",
     autotune_kwargs: Mapping | None,
 ) -> tuple[LayoutCandidate, LayoutDecision | None]:
     if isinstance(layout, str):
         if layout == "autotune":
             decision = autotune(program, space, target.model,
-                                n_ports=n_ports, **dict(autotune_kwargs or {}))
+                                n_ports=n_ports, storage=storage, codec=codec,
+                                **dict(autotune_kwargs or {}))
             return decision.best_cfa().candidate, decision
         if layout == "default":
             return LayoutCandidate("cfa", program.default_tile,
@@ -259,6 +291,8 @@ def compile(
     n_ports: int = 1,
     layout: "str | LayoutCandidate | LayoutDecision | Sequence[int]" = "autotune",
     backend: str = "auto",
+    storage: str = "redundant",
+    codec: "BlockCodec | str | None" = None,
     autotune_kwargs: Mapping | None = None,
 ) -> CompiledStencil:
     """Compile ``program`` on ``space`` into an executable stencil.
@@ -268,15 +302,27 @@ def compile(
     * ``n_ports`` — memory ports to repartition facets over (§VII);
       validated against ``target.max_ports`` and the backend's capability.
     * ``layout`` — ``"autotune"`` (default: search the layout family under
-      the target's model, co-tuned with the port repartition),
-      ``"default"`` (the paper's layout at the program's default tile), a
-      :class:`LayoutCandidate`, a previous :class:`LayoutDecision`, or a
-      bare tile tuple (the paper's layout at that tile).
+      the target's model, co-tuned with the port repartition and scored
+      under the requested storage discipline), ``"default"`` (the paper's
+      layout at the program's default tile), a :class:`LayoutCandidate`, a
+      previous :class:`LayoutDecision`, or a bare tile tuple (the paper's
+      layout at that tile).
     * ``backend`` — a registered executor name, or ``"auto"``
       (:func:`repro.core.cfa.executors.select_backend`: sharded when
-      ``n_ports > 1``, pallas on 3-D, wavefront otherwise).
+      ``n_ports > 1``, pallas on 3-D when it implements the storage,
+      wavefront otherwise).
+    * ``storage`` — the facet storage discipline (Ferry 2024):
+      ``"redundant"`` (the paper's duplicated layout, default),
+      ``"irredundant"`` (each value stored exactly once; halo reads take
+      the owner-facet indirection), or ``"compressed"`` (irredundant +
+      fixed-ratio block ``codec``); validated against the backend's
+      declared ``ExecutorCaps.storages``.
+    * ``codec`` — :class:`BlockCodec` or registered name for
+      ``storage="compressed"`` (default ``deltapack16``); rejected loudly
+      with any other storage.
     * ``autotune_kwargs`` — passed through to :func:`autotune` when
-      ``layout="autotune"`` (``seed``, ``budget``, ``cache_dir``, ...).
+      ``layout="autotune"`` (``seed``, ``budget``, ``footprint_weight``,
+      ``cache_dir``, ...).
     """
     prog = get_program(program) if isinstance(program, str) else program
     sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
@@ -293,20 +339,35 @@ def compile(
             f"target {tgt.name!r} has {tgt.max_ports} memory port(s); "
             f"n_ports={n_ports} exceeds the platform budget"
         )
+    if storage not in STORAGE_MODES:
+        raise ValueError(f"storage must be one of {STORAGE_MODES}: {storage!r}")
+    if codec is not None and storage != "compressed":
+        raise ValueError(
+            f'a codec only applies to storage="compressed", not {storage!r}'
+        )
+    cdc = get_codec(codec) if storage == "compressed" else None
 
-    name = select_backend(prog, sp, n_ports) if backend == "auto" else backend
+    name = (select_backend(prog, sp, n_ports, storage)
+            if backend == "auto" else backend)
     ex = get_executor(name)
-    check_backend(ex, prog, sp, n_ports)
+    check_backend(ex, prog, sp, n_ports, storage)
 
     cand, decision = _resolve_layout(layout, prog, sp, tgt, n_ports,
-                                     autotune_kwargs)
-    pipeline = CFAPipeline(
-        prog, sp, Tiling(cand.tile),
+                                     storage, cdc, autotune_kwargs)
+    pipe_kwargs = dict(
         ext_dirs=cand.ext_dirs,
         contiguity=cand.contiguity or "intra-tile",
         decision=decision,
     )
+    if storage == "redundant":
+        pipeline = CFAPipeline(prog, sp, Tiling(cand.tile), **pipe_kwargs)
+    elif storage == "irredundant":
+        pipeline = IrredundantPipeline(prog, sp, Tiling(cand.tile), **pipe_kwargs)
+    else:
+        pipeline = CompressedPipeline(prog, sp, Tiling(cand.tile),
+                                      codec=cdc, **pipe_kwargs)
     return CompiledStencil(
         program=prog, space=sp, target=tgt, n_ports=n_ports,
         executor=ex, pipeline=pipeline, layout=cand, decision=decision,
+        storage=storage, codec=cdc,
     )

@@ -41,7 +41,9 @@ from typing import Sequence
 import numpy as np
 
 from .bandwidth import AXI_ZC706, BandwidthReport, BurstModel, PortedPlan
+from .compress import get_codec
 from .facets import CONTIGUITY_LEVELS, extension_dir
+from .irredundant import STORAGE_MODES
 from .multiport import PORT_STRATEGIES, PortAssignment, best_repartition
 from .plans import (
     TransferPlan,
@@ -66,13 +68,17 @@ __all__ = [
     "clear_cache",
 ]
 
+# v4: storage axis (redundant / irredundant / compressed facet storage,
+# Ferry 2024) — per-candidate footprint/stored_elems/codec_bits fields on
+# ScoredLayout, decision-level storage + footprint_weight, and both folded
+# into the cache key.
 # v3: the cache key folds in the registered executor-backend capability
 # set (next to the target model identity it already carried), so decisions
 # re-search when the backend envelope changes; older schemas are rejected
 # loudly (CacheSchemaError -> warning) instead of silently deserializing.
 # v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
 # and the decision-level n_ports.
-_CACHE_VERSION = 3
+_CACHE_VERSION = 4
 
 
 class CacheSchemaError(ValueError):
@@ -112,8 +118,14 @@ class LayoutCandidate:
             parts.append("b" + "x".join(map(str, self.block)))
         return "/".join(parts)
 
-    def plan(self, space: IterSpace, program: StencilProgram) -> TransferPlan:
-        """The candidate's interior-tile transfer plan."""
+    def plan(self, space: IterSpace, program: StencilProgram, *,
+             storage: str = "redundant", codec=None) -> TransferPlan:
+        """The candidate's interior-tile transfer plan.
+
+        ``storage``/``codec`` select the facet storage discipline for CFA
+        candidates (``cfa_plan``); the single-array baselines keep their own
+        (duplicate-free by construction) storage accounting.
+        """
         tiling = Tiling(self.tile)
         tile = interior_tile(space, tiling)
         if self.scheme == "cfa":
@@ -124,6 +136,8 @@ class LayoutCandidate:
                 tile,
                 ext_dirs=dict(self.ext_dirs) if self.ext_dirs is not None else None,
                 contiguity=self.contiguity or "intra-tile",
+                storage=storage,
+                codec=codec if storage == "compressed" else None,
             )
         if self.scheme == "original":
             return original_layout_plan(space, program.deps, tiling, tile)
@@ -175,6 +189,12 @@ class ScoredLayout:
     port_assignment: tuple[tuple[int, int], ...] | None = None  # facet -> port
     port_balance: float | None = None
     port_speedup_vs_single: float | None = None
+    # storage axis (schema v4): discipline, whole-layout stored elements,
+    # per-tile stored slots, fixed-ratio compression width
+    storage: str = "redundant"
+    footprint: int | None = None
+    stored_elems: int | None = None
+    codec_bits: int | None = None
 
     @property
     def n_bursts(self) -> int:
@@ -215,13 +235,24 @@ class ScoredLayout:
             raw_bw=rep.raw_bw,
             effective_bw=rep.effective_bw,
             peak_fraction_effective=rep.peak_fraction_effective,
+            storage=plan.storage,
+            footprint=plan.footprint,
+            stored_elems=plan.stored_elems,
+            codec_bits=plan.codec_bits,
             **ports,
         )
 
 
-def _rank_key(s: ScoredLayout) -> tuple:
-    # Highest effective bandwidth first; deterministic tiebreaks.
-    return (-s.effective_bw, s.n_bursts, s.redundancy, s.candidate.key)
+def _rank_key(s: ScoredLayout, footprint_weight: float = 0.0) -> tuple:
+    # Highest effective bandwidth first; deterministic tiebreaks.  With a
+    # footprint weight the objective becomes bandwidth per stored element
+    # (to the ``footprint_weight`` power): weight 0 ranks purely by speed,
+    # weight 1 by effective bytes/s per slot the layout keeps resident —
+    # the footprint axis of the trade-off curve.
+    eff = s.effective_bw
+    if footprint_weight and s.footprint:
+        eff = eff / (s.footprint ** footprint_weight)
+    return (-eff, s.n_bursts, s.redundancy, s.candidate.key)
 
 
 # --------------------------------------------------------------------------
@@ -242,6 +273,9 @@ class LayoutDecision:
     evaluated: int
     ranked: tuple[ScoredLayout, ...]  # best first
     n_ports: int = 1
+    storage: str = "redundant"  # facet storage discipline searched under
+    codec: str | None = None  # block codec name (storage="compressed" only)
+    footprint_weight: float = 0.0  # footprint exponent in the ranking
     from_cache: bool = dataclasses.field(default=False, compare=False)
 
     @property
@@ -264,7 +298,8 @@ class LayoutDecision:
             return None
         from .programs import get_program
 
-        plan = s.candidate.plan(IterSpace(self.space), get_program(self.program))
+        plan = s.candidate.plan(IterSpace(self.space), get_program(self.program),
+                                storage=self.storage, codec=self.codec)
         f2p = dict(s.port_assignment)
         loads = [0.0] * s.n_ports
         for length, k in zip(plan.read_runs, plan.read_run_hosts or ()):
@@ -325,9 +360,9 @@ class LayoutDecision:
         if version != _CACHE_VERSION:
             raise CacheSchemaError(
                 f"autotune cache schema v{version}, need v{_CACHE_VERSION} "
-                f"(v3 records the target and the backend capability set in "
-                f"the key); delete the stale file or clear_cache() to "
-                f"re-search"
+                f"(v4 records the storage discipline, codec and footprint "
+                f"weight next to the v3 target + backend capability set); "
+                f"delete the stale file or clear_cache() to re-search"
             )
         ranked = []
         for s in d.pop("ranked"):
@@ -353,6 +388,9 @@ class LayoutDecision:
             evaluated=d["evaluated"],
             ranked=tuple(ranked),
             n_ports=d.get("n_ports", 1),
+            storage=d.get("storage", "redundant"),
+            codec=d.get("codec"),
+            footprint_weight=d.get("footprint_weight", 0.0),
         )
 
     def summary(self, top: int = 8) -> str:
@@ -361,6 +399,7 @@ class LayoutDecision:
             f"{self.program} @ space {self.space}  model={self.model}  "
             f"seed={self.seed}  evaluated={self.evaluated} candidates"
             f"{f'  ports={self.n_ports}' if self.n_ports > 1 else ''}"
+            f"{f'  storage={self.storage}' if self.storage != 'redundant' else ''}"
             f"{'  [cache]' if self.from_cache else ''}",
             f"{'rank':>4} {'eff-bw':>8} {'raw-bw':>8} {'bursts':>6} "
             f"{'redun':>6}  candidate",
@@ -434,6 +473,8 @@ def hand_coded_baselines(
     *,
     n_ports: int = 1,
     port_strategies: Sequence[str] = PORT_STRATEGIES,
+    storage: str = "redundant",
+    codec=None,
 ) -> dict[str, ScoredLayout]:
     """The paper's hand-coded plans at one tile size, scored under ``model``.
 
@@ -456,8 +497,8 @@ def hand_coded_baselines(
     out = {}
     for name, cand in cands.items():
         out[name] = ScoredLayout.from_plan(
-            cand, cand.plan(space, program), model,
-            n_ports=n_ports, port_strategies=port_strategies,
+            cand, cand.plan(space, program, storage=storage, codec=codec),
+            model, n_ports=n_ports, port_strategies=port_strategies,
         )
     return out
 
@@ -497,6 +538,9 @@ def _cache_key(
     refine_top: int,
     n_ports: int,
     port_strategies: Sequence[str],
+    storage: str,
+    codec_id: list | None,
+    footprint_weight: float,
 ) -> str:
     from .executors import capability_fingerprint
 
@@ -519,6 +563,10 @@ def _cache_key(
             "refine_top": refine_top,
             "n_ports": n_ports,
             "port_strategies": list(port_strategies),
+            # the storage axis (schema v4)
+            "storage": storage,
+            "codec": codec_id,
+            "footprint_weight": footprint_weight,
         },
         sort_keys=True,
     )
@@ -587,6 +635,9 @@ def autotune(
     refine_top: int = 3,
     n_ports: int = 1,
     port_strategies: Sequence[str] = PORT_STRATEGIES,
+    storage: str = "redundant",
+    codec=None,
+    footprint_weight: float = 0.0,
     cache: bool = True,
     cache_dir: Path | str | None = None,
 ) -> LayoutDecision:
@@ -610,6 +661,14 @@ def autotune(
     The winning facet->port split is carried on each ``ScoredLayout`` and
     surfaced as ``decision.port_assignment``.
 
+    ``storage`` scores every CFA candidate under a facet storage discipline
+    (``"redundant"`` — the paper's duplicated layout — or the Ferry-2024
+    ``"irredundant"``/``"compressed"`` modes; ``codec`` picks the
+    fixed-ratio block codec for the latter), and ``footprint_weight``
+    re-weights the ranking by bandwidth per stored element (see
+    ``_rank_key``), so footprint-constrained deployments can trade peak
+    speed for smaller resident layouts along a reproducible curve.
+
     Stages 2 and 3 stay within ``budget`` total evaluations (so
     ``decision.evaluated <= max(budget, number of seeds)``).
 
@@ -626,10 +685,25 @@ def autotune(
         )
     if n_ports < 1:
         raise ValueError(f"n_ports must be >= 1: {n_ports}")
+    if storage not in STORAGE_MODES:
+        raise ValueError(f"storage must be one of {STORAGE_MODES}: {storage!r}")
+    if codec is not None and storage != "compressed":
+        raise ValueError(
+            f'a codec only applies to storage="compressed", not {storage!r}'
+        )
+    if footprint_weight < 0:
+        # a negative exponent would silently invert the objective (prefer
+        # the LARGEST footprint) — reject like the other search knobs
+        raise ValueError(
+            f"footprint_weight must be >= 0: {footprint_weight}"
+        )
+    cdc = get_codec(codec) if storage == "compressed" else None
+    codec_id = [cdc.name, cdc.bits] if cdc is not None else None
     til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
 
     key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
-                     max_halo_elems, refine_top, n_ports, port_strategies)
+                     max_halo_elems, refine_top, n_ports, port_strategies,
+                     storage, codec_id, footprint_weight)
     path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
     if cache:
         hit = _cache_load(path)
@@ -645,7 +719,7 @@ def autotune(
         if cand.key in scored:
             return scored[cand.key]
         try:
-            plan = cand.plan(sp, prog)
+            plan = cand.plan(sp, prog, storage=storage, codec=cdc)
         except ValueError:
             return None  # illegal candidate (e.g. w > t); skip
         # (AssertionError deliberately propagates: it flags a layout bug,
@@ -662,7 +736,8 @@ def autotune(
     )
     if default_tile_ok:
         seeds = hand_coded_baselines(prog, sp, model, n_ports=n_ports,
-                                     port_strategies=port_strategies)
+                                     port_strategies=port_strategies,
+                                     storage=storage, codec=cdc)
         for s in seeds.values():
             scored.setdefault(s.candidate.key, s)
 
@@ -677,7 +752,8 @@ def autotune(
     # -- stage 3: layout refinement on the best tilings --------------------
     d = sp.ndim
     cfa_scored = sorted(
-        (s for s in scored.values() if s.candidate.scheme == "cfa"), key=_rank_key
+        (s for s in scored.values() if s.candidate.scheme == "cfa"),
+        key=lambda s: _rank_key(s, footprint_weight),
     )
     top_tiles = []
     for s in cfa_scored:
@@ -716,8 +792,12 @@ def autotune(
         seed=seed,
         budget=budget,
         evaluated=len(scored),
-        ranked=tuple(sorted(scored.values(), key=_rank_key)),
+        ranked=tuple(sorted(scored.values(),
+                            key=lambda s: _rank_key(s, footprint_weight))),
         n_ports=n_ports,
+        storage=storage,
+        codec=cdc.name if cdc is not None else None,
+        footprint_weight=footprint_weight,
     )
     if cache:
         _cache_store(path, decision)

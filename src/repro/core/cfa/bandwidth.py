@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from .compress import stored_bits
 from .plans import TransferPlan
 
 __all__ = [
@@ -62,6 +63,11 @@ class PortedPlan:
     read_useful: int
     write_useful: int
     facet_to_port: tuple[tuple[int, int], ...] | None = None
+    # storage accounting carried over from the repartitioned TransferPlan
+    # (codec_bits drives the per-port burst timing below)
+    storage: str = "redundant"
+    footprint: int | None = None
+    codec_bits: int | None = None
 
     def __post_init__(self) -> None:
         # Per-port schedules are consumed pairwise (zip with strict=True
@@ -125,9 +131,23 @@ class BurstModel:
     setup_s: float  # fixed cost per burst/DMA descriptor
     elem_bytes: int
 
-    def time_s(self, runs: tuple[int, ...]) -> float:
+    def burst_bytes(self, length: int, codec_bits: int | None = None) -> float:
+        """Wire bytes of one burst of ``length`` elements.
+
+        With ``codec_bits`` (fixed-ratio block compression, Ferry 2024) the
+        burst carries one raw header word plus ``codec_bits``-wide residuals
+        — same descriptor, fewer bytes; structure (and setup cost) unchanged.
+        The size formula is ``compress.stored_bits``, shared with the
+        codec's footprint accounting.
+        """
+        if not codec_bits:
+            return length * self.elem_bytes
+        return stored_bits(length, 8 * self.elem_bytes, codec_bits) / 8
+
+    def time_s(self, runs: tuple[int, ...], codec_bits: int | None = None) -> float:
         return sum(
-            self.setup_s + (r * self.elem_bytes) / self.peak_bytes_per_s for r in runs
+            self.setup_s + self.burst_bytes(r, codec_bits) / self.peak_bytes_per_s
+            for r in runs
         )
 
     def time(self, plan: "TransferPlan | PortedPlan") -> float:
@@ -136,16 +156,29 @@ class BurstModel:
         Single-port :class:`TransferPlan`: sum over all bursts.  Multi-port
         :class:`PortedPlan`: ports transfer concurrently, so the tile waits
         for the slowest port — the max over per-port burst schedules (§VII).
+        A plan carrying ``codec_bits`` is timed at its compressed
+        bytes-per-burst.
         """
+        cb = getattr(plan, "codec_bits", None)
         if isinstance(plan, PortedPlan):
             # strict: a ragged ported plan must fail loudly, not drop the
             # trailing ports from the max (under-reporting the time)
             return max(
-                self.time_s(rr) + self.time_s(wr)
+                self.time_s(rr, cb) + self.time_s(wr, cb)
                 for rr, wr in zip(plan.read_runs_by_port,
                                   plan.write_runs_by_port, strict=True)
             )
-        return self.time_s(plan.read_runs) + self.time_s(plan.write_runs)
+        return self.time_s(plan.read_runs, cb) + self.time_s(plan.write_runs, cb)
+
+    def plan_bytes(self, plan: "TransferPlan | PortedPlan") -> float:
+        """Wire bytes the whole plan moves (compression applied per burst)."""
+        cb = getattr(plan, "codec_bits", None)
+        if isinstance(plan, PortedPlan):
+            runs = [r for rr in plan.read_runs_by_port for r in rr]
+            runs += [w for wr in plan.write_runs_by_port for w in wr]
+        else:
+            runs = list(plan.read_runs) + list(plan.write_runs)
+        return sum(self.burst_bytes(r, cb) for r in runs)
 
     @property
     def setup_elems(self) -> float:
@@ -172,13 +205,15 @@ TPU_V5E_HBM = BurstModel(
 class BandwidthReport:
     scheme: str
     model: str
-    raw_bw: float  # transferred bytes / time
-    effective_bw: float  # useful bytes / time
+    raw_bw: float  # transferred (wire) bytes / time
+    effective_bw: float  # useful (logical) bytes / time
     peak_fraction_raw: float
     peak_fraction_effective: float
     n_bursts: int
     redundancy: float
     n_ports: int = 1
+    storage: str = "redundant"
+    footprint: int | None = None  # whole-layout stored elements
 
     @staticmethod
     def evaluate(
@@ -189,10 +224,14 @@ class BandwidthReport:
         For a :class:`PortedPlan` the time is the slowest port's (ports run
         concurrently), so raw/effective bandwidth are *aggregate* across
         ports and ``peak_fraction_*`` is relative to a single port's peak —
-        an n-port plan can exceed 1.0, which is the point of §VII.
+        an n-port plan can exceed 1.0, which is the point of §VII.  For a
+        compressed plan ``raw_bw`` counts wire bytes (never above peak per
+        port) while ``effective_bw`` counts the logical bytes delivered —
+        compression can push it past the wire peak, which is the point of
+        the Ferry-2024 layout.
         """
         t = model.time(plan)
-        raw = plan.transferred * model.elem_bytes / t if t else 0.0
+        raw = model.plan_bytes(plan) / t if t else 0.0
         eff = plan.useful * model.elem_bytes / t if t else 0.0
         return BandwidthReport(
             scheme=plan.scheme,
@@ -204,4 +243,6 @@ class BandwidthReport:
             n_bursts=plan.n_bursts,
             redundancy=plan.redundancy,
             n_ports=getattr(plan, "n_ports", 1),
+            storage=getattr(plan, "storage", "redundant"),
+            footprint=getattr(plan, "footprint", None),
         )

@@ -1,0 +1,184 @@
+"""Fixed-ratio per-block compression codecs for facet storage (pure JAX).
+
+The irredundant-layout follow-up to the source paper (Ferry et al., 2024,
+*An Irredundant and Compressed Data Layout to Optimize Bandwidth Utilization
+of FPGA Accelerators*) pairs deduplicated facet storage with a *fixed-ratio*
+block compression: every facet block is stored in a statically known number
+of bits, so burst lengths — and the DMA descriptors that move them — stay
+compile-time constants while each burst carries fewer bytes.  This module is
+that codec, adapted to JAX:
+
+* **XOR-delta + bit-pack** (:class:`BlockCodec` with ``bits`` in {8,16,32}):
+  a block is flattened, consecutive raw words are XOR'd (smooth stencil data
+  makes neighbouring bit patterns agree in their high bits, so residuals
+  concentrate near zero *in the high-order sense*), each residual keeps its
+  ``bits`` high-order bits, and residuals are packed densely into words.
+  The first element of each block is stored raw (the per-block header), so
+  the stored size is exactly ``elem_bits + (n-1) * bits`` — fixed ratio.
+* **lossless iff the dropped low-order residual bits are zero**: the codec
+  never changes burst *structure*, only bytes-per-burst, and
+  :meth:`BlockCodec.exact` reports whether a given block round-trips
+  bit-identically (the tests pin this on bit-truncated data;
+  :meth:`BlockCodec.roundtrip` is what the compressed execution pipeline
+  stores, so results always reflect what compression preserved).
+
+Everything is shape-static (reshape / shift / or / ``associative_scan``
+with XOR), hence jit-compatible; the transfer-time effect is modeled by
+``BurstModel`` via ``TransferPlan.codec_bits`` (reduced bytes per burst).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockCodec", "CODECS", "DEFAULT_CODEC", "get_codec", "stored_bits"]
+
+
+def stored_bits(n_elems: int, elem_bits: int, bits: int | None) -> int:
+    """Fixed-ratio stored size of an ``n_elems`` run of ``elem_bits`` words:
+    one raw header word + ``bits``-wide residuals (``None``/0 =
+    uncompressed).  The single size formula shared by the codec's footprint
+    accounting and ``BurstModel``'s bytes-per-burst model — change the
+    framing here and both stay consistent."""
+    if n_elems <= 0:
+        return 0
+    if not bits:
+        return n_elems * elem_bits
+    return elem_bits + (n_elems - 1) * min(bits, elem_bits)
+
+
+def _uint_dtype(itemsize: int):
+    try:
+        return {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[itemsize]
+    except KeyError:
+        raise ValueError(f"unsupported element width: {itemsize} bytes") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCodec:
+    """Fixed-ratio XOR-delta bit-packing of one storage block.
+
+    ``bits`` is the stored width of each residual (``0`` marks the identity
+    codec ``raw``: no transform, ratio 1.0).  Residuals keep their *high*
+    ``bits`` bits — the sign/exponent end of IEEE words — so truncation
+    degrades mantissa tails first, and data whose XOR-deltas fit in ``bits``
+    high bits round-trips exactly.
+    """
+
+    name: str
+    bits: int
+
+    def __post_init__(self) -> None:
+        if self.bits < 0:
+            raise ValueError(f"codec bits must be >= 0: {self.bits}")
+        if self.bits and self.bits not in (8, 16, 32):
+            raise ValueError(
+                f"fixed-ratio packing needs bits in (8, 16, 32): {self.bits}"
+            )
+
+    # -- the model-side knob -------------------------------------------------
+
+    def stored_bits(self, n_elems: int, elem_bits: int) -> int:
+        """Exact stored size of an ``n_elems`` block of ``elem_bits`` words
+        (one raw header word + fixed-width residuals)."""
+        return stored_bits(n_elems, elem_bits, self.bits)
+
+    def ratio(self, n_elems: int, elem_bits: int = 32) -> float:
+        """stored bits / raw bits for an ``n_elems`` block (<= 1.0)."""
+        if n_elems <= 0:
+            return 1.0
+        return self.stored_bits(n_elems, elem_bits) / (n_elems * elem_bits)
+
+    # -- pure-JAX encode / decode -------------------------------------------
+
+    def _widths(self, dtype) -> tuple[int, int]:
+        elem_bits = 8 * np.dtype(dtype).itemsize
+        b = min(self.bits, elem_bits) if self.bits else elem_bits
+        if elem_bits % b:
+            raise ValueError(
+                f"codec {self.name!r}: {b} residual bits do not pack into "
+                f"{elem_bits}-bit words"
+            )
+        return elem_bits, b
+
+    def encode(self, block: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (header, packed): the raw first word and the densely packed
+        high-``bits`` XOR residuals of the flattened block."""
+        u = _uint_dtype(np.dtype(block.dtype).itemsize)
+        x = jax.lax.bitcast_convert_type(block, u).ravel()
+        elem_bits, b = self._widths(block.dtype)
+        header = x[:1]
+        if not self.bits or x.size <= 1:
+            return header, x[1:]
+        resid = (x[1:] ^ x[:-1]) >> (elem_bits - b)  # keep the high bits
+        per = elem_bits // b  # residuals per packed word
+        pad = (-resid.size) % per
+        resid = jnp.pad(resid, (0, pad)).reshape(-1, per)
+        packed = jnp.zeros(resid.shape[0], dtype=u)
+        for i in range(per):
+            packed = packed | (resid[:, i] << i * b)
+        return header, packed
+
+    def decode(self, header: jnp.ndarray, packed: jnp.ndarray,
+               shape: tuple[int, ...], dtype) -> jnp.ndarray:
+        """Inverse of :meth:`encode` (up to the dropped low-order bits)."""
+        u = _uint_dtype(np.dtype(dtype).itemsize)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        elem_bits, b = self._widths(dtype)
+        if not self.bits or n <= 1:
+            words = jnp.concatenate([header, packed])[:n]
+            return jax.lax.bitcast_convert_type(words, dtype).reshape(shape)
+        per = elem_bits // b
+        mask = jnp.asarray((1 << b) - 1, dtype=u)  # b <= elem_bits, so it fits
+        resid = jnp.stack(
+            [(packed >> i * b) & mask for i in range(per)],
+            axis=1,
+        ).ravel()[: n - 1]
+        deltas = resid << (elem_bits - b)  # low-order bits are lost
+        words = jax.lax.associative_scan(
+            jnp.bitwise_xor, jnp.concatenate([header, deltas])
+        )
+        return jax.lax.bitcast_convert_type(words, dtype).reshape(shape)
+
+    def roundtrip(self, block: jnp.ndarray) -> jnp.ndarray:
+        """What storage retains: ``decode(encode(block))`` — bit-identical
+        when the data's XOR-deltas fit the ratio, truncated otherwise."""
+        if not self.bits:
+            return block
+        header, packed = self.encode(block)
+        return self.decode(header, packed, tuple(block.shape), block.dtype)
+
+    def exact(self, block: jnp.ndarray) -> bool:
+        """True iff the block survives the fixed ratio bit-identically."""
+        a = jnp.asarray(block)
+        return bool((self.roundtrip(a) == a).all())
+
+
+#: Registered codecs: ``raw`` is the identity (ratio 1.0, always exact);
+#: ``deltapack{8,16,32}`` keep that many high residual bits per element.
+CODECS: dict[str, BlockCodec] = {
+    "raw": BlockCodec("raw", bits=0),
+    "deltapack8": BlockCodec("deltapack8", bits=8),
+    "deltapack16": BlockCodec("deltapack16", bits=16),
+    "deltapack32": BlockCodec("deltapack32", bits=32),
+}
+
+DEFAULT_CODEC = "deltapack16"
+
+
+def get_codec(codec: "BlockCodec | str | None") -> BlockCodec:
+    """Resolve a codec name (or pass a :class:`BlockCodec` through);
+    ``None`` means :data:`DEFAULT_CODEC`."""
+    if codec is None:
+        return CODECS[DEFAULT_CODEC]
+    if isinstance(codec, BlockCodec):
+        return codec
+    try:
+        return CODECS[codec]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {codec!r}; registered: {sorted(CODECS)}"
+        ) from None

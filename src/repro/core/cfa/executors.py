@@ -66,11 +66,16 @@ class ExecutorCaps:
     repartition (anything else requires ``n_ports == 1``).
     ``kernels`` — whether the backend drives the Pallas kernels (so callers
     know an ``interpret=`` knob applies).
+    ``storages`` — the facet storage disciplines the backend implements
+    (``repro.core.cfa.irredundant.STORAGE_MODES``); a kernel backend whose
+    read engine has no decompression stage must not silently accept
+    ``storage="compressed"``.
     """
 
     ndims: tuple[int, ...] | None = None
     multiport: bool = False
     kernels: bool = False
+    storages: tuple[str, ...] = ("redundant", "irredundant", "compressed")
     description: str = ""
 
 
@@ -212,6 +217,11 @@ register_executor(_FnExecutor(
 register_executor(_FnExecutor(
     "pallas",
     ExecutorCaps(ndims=(3,), kernels=True,
+                 # the facet_fetch read engine addresses raw facet blocks
+                 # (redundant, or irredundant via the owner-block
+                 # indirection); it has no in-kernel decode stage, so the
+                 # compressed discipline is declared unsupported
+                 storages=("redundant", "irredundant"),
                  description="wavefront sweep through the Pallas tile "
                              "executor (facet_fetch/stencil kernel family, "
                              "3-D only)"),
@@ -237,8 +247,10 @@ def _ineligible_reason(
     program: StencilProgram,
     space: IterSpace,
     n_ports: int,
+    storage: str = "redundant",
 ) -> str | None:
-    """Why this backend cannot run (program, space, n_ports); None if it can."""
+    """Why this backend cannot run (program, space, n_ports, storage);
+    None if it can."""
     caps = executor.caps
     if caps.ndims is not None and space.ndim not in caps.ndims:
         return (
@@ -248,6 +260,11 @@ def _ineligible_reason(
         )
     if n_ports > 1 and not caps.multiport:
         return f"backend {executor.name!r} is single-port, got n_ports={n_ports}"
+    if storage not in caps.storages:
+        return (
+            f"backend {executor.name!r} does not implement "
+            f"{storage!r} facet storage (declares {caps.storages})"
+        )
     return None
 
 
@@ -256,40 +273,47 @@ def check_backend(
     program: StencilProgram,
     space: IterSpace,
     n_ports: int = 1,
+    storage: str = "redundant",
 ) -> None:
-    """Validate (program, space, n_ports) against the backend's declared
-    capabilities; raises :class:`BackendError` with the eligible
+    """Validate (program, space, n_ports, storage) against the backend's
+    declared capabilities; raises :class:`BackendError` with the eligible
     alternatives spelled out."""
-    reason = _ineligible_reason(executor, program, space, n_ports)
+    reason = _ineligible_reason(executor, program, space, n_ports, storage)
     if reason is not None:
         raise BackendError(
             f"{reason}; eligible backends: "
-            f"{available_backends(program, space, n_ports)}"
+            f"{available_backends(program, space, n_ports, storage)}"
         )
 
 
 def available_backends(
-    program: StencilProgram, space: IterSpace, n_ports: int = 1
+    program: StencilProgram, space: IterSpace, n_ports: int = 1,
+    storage: str = "redundant",
 ) -> list[str]:
-    """Names of registered backends able to run (program, space, n_ports)."""
+    """Names of registered backends able to run (program, space, n_ports,
+    storage)."""
     return [
         name for name, ex in EXECUTORS.items()
-        if _ineligible_reason(ex, program, space, n_ports) is None
+        if _ineligible_reason(ex, program, space, n_ports, storage) is None
     ]
 
 
 def select_backend(
-    program: StencilProgram, space: IterSpace, n_ports: int = 1
+    program: StencilProgram, space: IterSpace, n_ports: int = 1,
+    storage: str = "redundant",
 ) -> str:
     """The ``backend="auto"`` rule, in one place:
 
     1. ``n_ports > 1``  →  ``sharded``   (the only multiport backend);
-    2. 3-D spaces       →  ``pallas``    (the paper's kernel configuration);
+    2. 3-D spaces       →  ``pallas``    (the paper's kernel configuration)
+       — unless the requested storage discipline is outside the kernel
+       backend's declared envelope (compressed), in which case
     3. anything else    →  ``wavefront`` (dimension-generic, batched).
     """
     if n_ports > 1:
         return "sharded"
-    if space.ndim == 3:
+    if (space.ndim == 3
+            and storage in EXECUTORS["pallas"].caps.storages):
         return "pallas"
     return "wavefront"
 
@@ -297,12 +321,13 @@ def select_backend(
 def capability_fingerprint() -> list[list]:
     """Stable summary of the registered backend capability set.
 
-    Folded into the autotune cache key (schema v3): a decision computed when
-    e.g. the ``pallas`` backend was 3-D-only must not be silently reused
-    after a backend's capability envelope changes.
+    Folded into the autotune cache key (schema v3+): a decision computed
+    when e.g. the ``pallas`` backend was 3-D-only must not be silently
+    reused after a backend's capability envelope (dimensions, ports,
+    storage disciplines) changes.
     """
     return [
         [name, list(ex.caps.ndims) if ex.caps.ndims is not None else None,
-         ex.caps.multiport, ex.caps.kernels]
+         ex.caps.multiport, ex.caps.kernels, list(ex.caps.storages)]
         for name, ex in sorted(EXECUTORS.items())
     ]

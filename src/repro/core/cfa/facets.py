@@ -66,6 +66,15 @@ __all__ = [
 CONTIGUITY_LEVELS = ("full-tile", "inter-tile", "intra-tile")
 
 
+def row_major_strides(shape: Sequence[int]) -> np.ndarray:
+    """Row-major strides (elements) of ``shape`` — the one linearisation
+    convention every address map in this package shares."""
+    strides = np.ones(len(shape), dtype=np.int64)
+    for i in range(len(shape) - 2, -1, -1):
+        strides[i] = strides[i + 1] * shape[i + 1]
+    return strides
+
+
 def extension_dir(axis: int, ndim: int) -> int:
     """Cyclic inter-tile contiguity direction ``c_k = (k+1) mod d``.
 
@@ -164,17 +173,11 @@ class FacetSpec:
 
     def offsets(self, pts: np.ndarray) -> np.ndarray:
         """Row-major linear offsets within the facet array for iteration points."""
-        idx = self.coords(pts)
-        strides = np.ones(len(self.shape), dtype=np.int64)
-        for i in range(len(self.shape) - 2, -1, -1):
-            strides[i] = strides[i + 1] * self.shape[i + 1]
-        return idx @ strides
+        return self.coords(pts) @ row_major_strides(self.shape)
 
     def block_start(self, tile: Sequence[int]) -> int:
         """Linear offset of the first element of tile T's facet block."""
-        strides = np.ones(len(self.shape), dtype=np.int64)
-        for i in range(len(self.shape) - 2, -1, -1):
-            strides[i] = strides[i + 1] * self.shape[i + 1]
+        strides = row_major_strides(self.shape)
         q = np.asarray(tile, dtype=np.int64)
         idx = np.array([q[a] for a in self.outer_axes], dtype=np.int64)
         return int(idx @ strides[: len(self.outer_axes)])

@@ -224,6 +224,9 @@ def repartition(
         read_useful=plan.read_useful,
         write_useful=plan.write_useful,
         facet_to_port=assign,
+        storage=plan.storage,
+        footprint=plan.footprint,
+        codec_bits=plan.codec_bits,
     )
 
 
@@ -277,6 +280,9 @@ def best_repartition(
             write_runs_by_port=(plan.write_runs,),
             read_useful=plan.read_useful,
             write_useful=plan.write_useful,
+            storage=plan.storage,
+            footprint=plan.footprint,
+            codec_bits=plan.codec_bits,
         )
     return _pad_ports(best, n_ports)
 

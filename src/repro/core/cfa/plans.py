@@ -23,7 +23,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .facets import FacetSpec, build_facet_specs
+from .facets import FacetSpec, build_facet_specs, row_major_strides
+from .irredundant import STORAGE_MODES, build_storage_map, owner_of
 from .spaces import (
     Deps,
     IterSpace,
@@ -57,6 +58,14 @@ class TransferPlan:
     multi-port repartition moves around (``repro.core.cfa.multiport``).  The
     CFA plans fill them; the single-array baselines leave them ``None``
     (their runs can still be repartitioned at burst granularity).
+
+    Storage accounting (the footprint axis of the Ferry-2024 follow-up):
+    ``storage`` names the discipline the plan was derived under;
+    ``stored_elems`` is how many storage slots one tile's writes persist
+    (counting duplicates under ``"redundant"``, exactly-once otherwise);
+    ``footprint`` is the whole-layout stored-element total across the space;
+    ``codec_bits`` is the fixed-ratio compression width (``None`` =
+    uncompressed) that ``BurstModel`` turns into reduced bytes per burst.
     """
 
     scheme: str
@@ -66,12 +75,36 @@ class TransferPlan:
     write_useful: int
     read_run_hosts: tuple[int, ...] | None = None  # facet axis per read run
     write_run_hosts: tuple[int, ...] | None = None  # facet axis per write run
+    storage: str = "redundant"
+    stored_elems: int | None = None  # slots one tile's writes persist
+    footprint: int | None = None  # whole-layout stored elements
+    codec_bits: int | None = None  # fixed-ratio compression width
 
     def __post_init__(self) -> None:
         if self.read_run_hosts is not None and len(self.read_run_hosts) != len(self.read_runs):
             raise ValueError("read_run_hosts must attribute every read run")
         if self.write_run_hosts is not None and len(self.write_run_hosts) != len(self.write_runs):
             raise ValueError("write_run_hosts must attribute every write run")
+        if self.storage not in STORAGE_MODES:
+            raise ValueError(
+                f"storage must be one of {STORAGE_MODES}: {self.storage!r}"
+            )
+        # negative/zero guards mirroring the PR 3 __post_init__ hardening:
+        # a non-positive storage figure is always an accounting bug, never a
+        # legal layout, so it must fail at construction rather than skew a
+        # ranking downstream
+        if self.stored_elems is not None and self.stored_elems <= 0:
+            raise ValueError(
+                f"stored_elems must be positive when set: {self.stored_elems}"
+            )
+        if self.footprint is not None and self.footprint <= 0:
+            raise ValueError(
+                f"footprint must be positive when set: {self.footprint}"
+            )
+        if self.codec_bits is not None and self.codec_bits <= 0:
+            raise ValueError(
+                f"codec_bits must be positive when set: {self.codec_bits}"
+            )
 
     @property
     def n_read_bursts(self) -> int:
@@ -275,6 +308,20 @@ def cfa_piece_census(
     }
 
 
+def _owner_hosts(
+    pts: np.ndarray, specs: Mapping[int, FacetSpec]
+) -> dict[int, np.ndarray]:
+    """Irredundant read resolution: each point comes from the one facet that
+    stores it (``irredundant.owner_of``) — no host choice exists."""
+    own = owner_of(specs, pts)
+    if (own < 0).any():
+        raise AssertionError(
+            "flow-in point outside every facet domain — contradicts the "
+            "appendix coverage proof; layout bug"
+        )
+    return {k: np.flatnonzero(own == k) for k in specs}
+
+
 def cfa_plan(
     space: IterSpace,
     deps: Deps,
@@ -284,24 +331,43 @@ def cfa_plan(
     boxed: bool = True,
     ext_dirs: Mapping[int, int] | None = None,
     contiguity: str = "intra-tile",
+    storage: str = "redundant",
+    codec=None,
 ) -> TransferPlan:
     """CFA transfer plan for one tile.
 
-    Writes: every facet block in full — one burst per facet by construction.
-    Reads: flow-in points fetched from their host facets; ``boxed`` applies
-    the paper's rectangular over-approximation (merged bursts + guards),
-    otherwise exact guarded runs are counted.  ``ext_dirs``/``contiguity``
-    select a layout variant (see ``build_facet_specs``); the defaults are the
-    paper's final layout, which the autotuner treats as one candidate among
-    the whole family.
+    Writes: under ``storage="redundant"`` every facet block in full — one
+    burst per facet by construction; under ``"irredundant"``/``"compressed"``
+    only the owned slots (each value stored exactly once), whose runs the
+    exact counting measures — deduplication trades write redundancy for
+    extra write bursts, and the plan prices both sides honestly.
+    Reads: flow-in points fetched from their host facets (redundant: the
+    paper's §IV-H/I host assignment; irredundant: the owner facet — there
+    is no choice); ``boxed`` applies the paper's rectangular
+    over-approximation (merged bursts + guards), otherwise exact guarded
+    runs are counted.  ``ext_dirs``/``contiguity`` select a layout variant
+    (see ``build_facet_specs``); the defaults are the paper's final layout,
+    which the autotuner treats as one candidate among the whole family.
+    ``codec`` (``storage="compressed"`` only) sets ``codec_bits`` so
+    ``BurstModel`` times the bursts at the fixed compression ratio.
     """
+    if storage not in STORAGE_MODES:
+        raise ValueError(f"storage must be one of {STORAGE_MODES}: {storage!r}")
+    if codec is not None and storage != "compressed":
+        raise ValueError(
+            f'a codec only applies to storage="compressed", not {storage!r}'
+        )
     if tile is None:
         tile = interior_tile(space, tiling)
     widths = facet_widths(deps)
     specs = build_facet_specs(space, deps, tiling, ext_dirs=ext_dirs, contiguity=contiguity)
+    smap = build_storage_map(specs) if storage != "redundant" else None
 
     fin = flow_in_points(space, deps, tiling, tile)
-    hosts = _assign_hosts(fin, tile, tiling, widths, specs)
+    if storage == "redundant":
+        hosts = _assign_hosts(fin, tile, tiling, widths, specs)
+    else:
+        hosts = _owner_hosts(fin, specs)
     read_runs: list[int] = []
     read_hosts: list[int] = []
     for k, idx in hosts.items():
@@ -320,11 +386,30 @@ def cfa_plan(
     write_hosts: list[int] = []
     for k, spec in specs.items():
         fpts = facet_points(tiling, widths, k, tile)
-        runs = count_runs(spec.offsets(fpts))
-        assert len(runs) == 1, "full-tile contiguity violated — layout bug"
+        if storage != "redundant":
+            fpts = fpts[owner_of(specs, fpts) == k]
+            if len(fpts) == 0:
+                continue  # facet fully owned by lower axes (w_j == t_j)
+            runs = count_runs(spec.offsets(fpts))
+        else:
+            runs = count_runs(spec.offsets(fpts))
+            assert len(runs) == 1, "full-tile contiguity violated — layout bug"
         write_runs.extend(runs)
         write_hosts.extend([k] * len(runs))
 
+    if storage == "redundant":
+        stored = sum(s.block_elems for s in specs.values())
+        footprint = sum(s.size for s in specs.values())
+        codec_bits = None
+    else:
+        stored = sum(smap.owned_per_block.values())
+        footprint = smap.stored_elems
+        codec_bits = None
+        if storage == "compressed":
+            from .compress import get_codec
+
+            bits = get_codec(codec).bits
+            codec_bits = bits if bits else None  # "raw" models as uncompressed
     return TransferPlan(
         scheme="cfa" if boxed else "cfa-exact",
         read_runs=tuple(read_runs),
@@ -333,6 +418,10 @@ def cfa_plan(
         write_useful=int(len(fout)),
         read_run_hosts=tuple(read_hosts),
         write_run_hosts=tuple(write_hosts),
+        storage=storage,
+        stored_elems=int(stored),
+        footprint=int(footprint),
+        codec_bits=codec_bits,
     )
 
 
@@ -342,10 +431,7 @@ def cfa_plan(
 
 
 def _row_major_offsets(pts: np.ndarray, sizes: Sequence[int]) -> np.ndarray:
-    strides = np.ones(len(sizes), dtype=np.int64)
-    for i in range(len(sizes) - 2, -1, -1):
-        strides[i] = strides[i + 1] * sizes[i + 1]
-    return np.atleast_2d(pts) @ strides
+    return np.atleast_2d(pts) @ row_major_strides(sizes)
 
 
 def original_layout_plan(
@@ -358,7 +444,8 @@ def original_layout_plan(
     fout = flow_out_points(space, deps, tiling, tile)
     rr = count_runs(_row_major_offsets(fin, space.sizes))
     wr = count_runs(_row_major_offsets(fout, space.sizes))
-    return TransferPlan("original", rr, wr, int(len(fin)), int(len(fout)))
+    return TransferPlan("original", rr, wr, int(len(fin)), int(len(fout)),
+                        footprint=int(np.prod(space.sizes, dtype=np.int64)))
 
 
 def bounding_box_plan(
@@ -376,7 +463,9 @@ def bounding_box_plan(
 
     fin = flow_in_points(space, deps, tiling, tile)
     fout = flow_out_points(space, deps, tiling, tile)
-    return TransferPlan("bbox", _box_runs(fin), _box_runs(fout), int(len(fin)), int(len(fout)))
+    return TransferPlan("bbox", _box_runs(fin), _box_runs(fout),
+                        int(len(fin)), int(len(fout)),
+                        footprint=int(np.prod(space.sizes, dtype=np.int64)))
 
 
 def data_tiling_plan(
@@ -419,4 +508,5 @@ def data_tiling_plan(
         _block_runs(fout),
         int(len(fin)),
         int(len(fout)),
+        footprint=int(np.prod(layout_sizes, dtype=np.int64)),
     )

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import typing
 from typing import Mapping
 
 import numpy as np
@@ -35,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from .deprecation import warn_deprecated as _deprecated
-from .facets import FacetSpec, build_facet_specs
+from .facets import FacetSpec, build_facet_specs, row_major_strides
 from .programs import StencilProgram
 from .spaces import IterSpace, Tiling, box_points
 
@@ -44,6 +45,10 @@ __all__ = ["CFAPipeline"]
 
 @dataclasses.dataclass
 class CFAPipeline:
+    #: facet storage discipline this pipeline realises; the irredundant /
+    #: compressed variants live in ``repro.core.cfa.irredundant``
+    storage: typing.ClassVar[str] = "redundant"
+
     program: StencilProgram
     space: IterSpace
     tiling: Tiling
@@ -180,7 +185,15 @@ class CFAPipeline:
         perm = np.argsort([(x0 + j) % w for j in range(w)])  # m -> slab j
         slab = jnp.take(slab, jnp.asarray(perm), axis=k)
         block = slab.transpose([a for a in spec.inner_axes])
-        return arr.at[self._block_index(spec, tile, virtual)].set(block)
+        return self._commit_block(arr, self._block_index(spec, tile, virtual),
+                                  block, spec)
+
+    def _commit_block(self, arr, idx, block, spec: FacetSpec):
+        """Write one laid-out facet block at its outer index.  The storage
+        disciplines override only this commit step (owner-masked under
+        irredundant storage, codec round-trip under compressed — see
+        ``repro.core.cfa.irredundant``)."""
+        return arr.at[idx].set(block)
 
     # -- copy-in -------------------------------------------------------------
 
@@ -211,14 +224,24 @@ class CFAPipeline:
         if virt.any():
             maps["virtual"] = pts[virt]
             taken |= virt
+        maps.update(self._halo_hosts(pts, lo, taken))
+        if not bool(taken.all()):
+            raise AssertionError("halo point not covered by any facet — layout bug")
+        return maps, lo, w
+
+    def _halo_hosts(self, pts, lo, taken):
+        """Assign each non-virtual halo point to the facet it is read from:
+        under redundant storage, the first facet crossed along its own axis
+        whose domain contains the point (any copy is valid — they are all
+        written).  ``taken`` is updated in place.  The irredundant pipeline
+        overrides this with the owner-facet indirection."""
+        maps = {}
         for k, spec in self.specs.items():
             mask = ~taken & (pts[:, k] < lo[k]) & (pts[:, k] >= 0) & spec.domain_mask(pts)
             if mask.any():
                 maps[k] = pts[mask]
                 taken |= mask
-        if not bool(taken.all()):
-            raise AssertionError("halo point not covered by any facet — layout bug")
-        return maps, lo, w
+        return maps
 
     def copy_in(self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...]) -> jnp.ndarray:
         """Gather the tile's flow-in into a halo buffer of shape (w + t).
@@ -275,10 +298,7 @@ class CFAPipeline:
             else:
                 idx_cols.append(pts[:, a] % spec.tile_sizes[a])
         idx = np.stack(idx_cols, axis=1)
-        strides = np.ones(len(shape), np.int64)
-        for i in range(len(shape) - 2, -1, -1):
-            strides[i] = strides[i + 1] * shape[i + 1]
-        return f0.reshape(-1)[jnp.asarray(idx @ strides)]
+        return f0.reshape(-1)[jnp.asarray(idx @ row_major_strides(shape))]
 
     # -- execute ---------------------------------------------------------------
 

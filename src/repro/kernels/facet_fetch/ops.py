@@ -36,7 +36,7 @@ def fetch_interior_halos_from_autotuned(program_name, facets, decision, *,
 
 def fetch_interior_halos_sharded(program_name, facets, space, tile,
                                  assignment, mesh=None, *, axis="port",
-                                 interpret=True):
+                                 interpret=True, storage="redundant"):
     """Block-wise halo fetch with facet arrays resident on their ports.
 
     The multi-port analogue of ``fetch_interior_halos``: the facet arrays are
@@ -66,4 +66,5 @@ def fetch_interior_halos_sharded(program_name, facets, space, tile,
         for k, v in facets.items()
     }
     return fetch_interior_halos(program_name, facets, tuple(space),
-                                tuple(tile), interpret=interpret)
+                                tuple(tile), interpret=interpret,
+                                storage=storage)

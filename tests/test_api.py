@@ -364,8 +364,10 @@ PUBLIC_API = [
     "AXI_ZC706",
     "BackendError",
     "BandwidthReport",
+    "BlockCodec",
     "BurstModel",
     "CFAPipeline",
+    "CODECS",
     "CacheSchemaError",
     "CompiledStencil",
     "Deps",
@@ -377,8 +379,10 @@ PUBLIC_API = [
     "LayoutDecision",
     "PROGRAMS",
     "PortedPlan",
+    "STORAGE_MODES",
     "ScoredLayout",
     "StencilProgram",
+    "StorageMap",
     "TARGETS",
     "TPU_V5E_HBM",
     "Target",
@@ -386,12 +390,16 @@ PUBLIC_API = [
     "TransferPlan",
     "autotune",
     "available_backends",
+    "build_storage_map",
     "compile",
+    "dedup_facets",
+    "get_codec",
     "get_executor",
     "get_program",
     "get_target",
     "register_executor",
     "register_target",
+    "rehydrate_facets",
     "select_backend",
 ]
 

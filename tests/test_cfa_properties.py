@@ -181,6 +181,96 @@ def test_nd_sweep_matches_oracle_random_tilings(data):
                                        rtol=1e-12, atol=1e-12)
 
 
+# ---------------------------------------------------------------------------
+# Irredundant storage (Ferry 2024): single assignment over random spaces
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_irredundant_single_assignment_partition(data):
+    """Every canonical point covered by some facet is owned by *exactly one*
+    facet block — the irredundant discipline's invariant — over random
+    2-D/3-D/4-D spaces and dependence patterns."""
+    import numpy as np
+
+    from repro.core.cfa import build_storage_map, owner_of
+    from repro.core.cfa.spaces import facet_points
+
+    d = data.draw(st.sampled_from([2, 3, 4]), label="d")
+    deps = data.draw(dep_patterns(d), label="deps")
+    w = facet_widths(deps)
+    tiles = tuple(
+        data.draw(st.integers(min_value=max(1, w[a]), max_value=4), label=f"t{a}")
+        for a in range(d)
+    )
+    nt = tuple(data.draw(st.integers(min_value=1, max_value=2), label=f"n{a}")
+               for a in range(d))
+    space = IterSpace(tuple(t * n for t, n in zip(tiles, nt)))
+    tiling = Tiling(tiles)
+    specs = build_facet_specs(space, deps, tiling)
+    smap = build_storage_map(specs)
+    assert smap.redundancy == 1.0
+    tile = tuple(min(1, n - 1) for n in nt)
+    pts = np.concatenate([facet_points(tiling, w, k, tile) for k in specs])
+    uniq = np.unique(pts, axis=0)
+    own = owner_of(specs, uniq)
+    # total: every facet-union point has an owner ...
+    assert (own >= 0).all()
+    # ... the owner's facet covers it ...
+    for k in specs:
+        sel = own == k
+        if sel.any():
+            assert bool(specs[k].domain_mask(uniq[sel]).all())
+    # ... and the static per-block masks count exactly the owned points,
+    # so ownership partitions the union (stored slots == distinct points)
+    for k in specs:
+        assert smap.owned_per_block[k] == int((own == k).sum())
+    assert sum(smap.owned_per_block.values()) == len(uniq)
+    n_blocks = int(np.prod(nt))
+    assert smap.stored_elems == len(uniq) * n_blocks
+    assert smap.stored_elems <= smap.redundant_elems
+
+
+@given(st.data())
+@settings(max_examples=6, deadline=None)
+def test_irredundant_sweep_matches_redundant_random_tilings(data):
+    """The irredundant executor path is exact for random tilings of the
+    2-D and 4-D example programs: rehydrate(irredundant sweep) equals the
+    redundant sweep bit-for-bit."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.cfa import CFAPipeline, dedup_facets, get_program, rehydrate_facets
+    from repro.core.cfa.irredundant import IrredundantPipeline
+
+    name = data.draw(st.sampled_from(["heat1d", "heat3d"]), label="program")
+    prog = get_program(name)
+    w = facet_widths(prog.deps)
+    d = prog.ndim
+    tmax = 4 if d == 2 else 3
+    tiles = tuple(
+        data.draw(st.integers(min_value=max(1, w[a]), max_value=tmax),
+                  label=f"t{a}")
+        for a in range(d)
+    )
+    nt = tuple(data.draw(st.integers(min_value=1, max_value=2), label=f"n{a}")
+               for a in range(d))
+    space = tuple(t * n for t, n in zip(tiles, nt))
+    red = CFAPipeline(prog, IterSpace(space), Tiling(tiles))
+    irr = IrredundantPipeline(prog, IterSpace(space), Tiling(tiles))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1),
+                                          label="seed"))
+    inputs = jnp.asarray(rng.normal(size=(red.specs[0].width, *space[1:])))
+    f_red = red._sweep(inputs, dtype=jnp.float64)
+    f_irr = irr._sweep(inputs, dtype=jnp.float64)
+    dd = dedup_facets(f_red, irr.storage_map)
+    for k in f_red:
+        assert (np.asarray(f_irr[k]) == np.asarray(dd[k])).all(), f"facet {k}"
+    rh = rehydrate_facets(f_irr, irr.storage_map)
+    for k in f_red:
+        assert (np.asarray(rh[k]) == np.asarray(f_red[k])).all(), f"facet {k}"
+
+
 @given(
     nt=st.tuples(*[st.integers(1, 3)] * 3),
     seed=st.integers(0, 2**31 - 1),
