@@ -51,6 +51,16 @@ from repro.core.cfa import (
     LayoutDecision,
     autotune,
     CacheSchemaError,
+    SCORE_MODES,
+    # measured-vs-modeled calibration (autotune(score="measured"),
+    # report(measured=True), the calibration bench)
+    TransferSample,
+    CalibratedModel,
+    Calibration,
+    measure_runs,
+    measure_plan,
+    fit_burst_model,
+    calibrate,
     # plans / bandwidth carried on CompiledStencil
     TransferPlan,
     BurstModel,
@@ -97,6 +107,14 @@ __all__ = [
     "LayoutDecision",
     "autotune",
     "CacheSchemaError",
+    "SCORE_MODES",
+    "TransferSample",
+    "CalibratedModel",
+    "Calibration",
+    "measure_runs",
+    "measure_plan",
+    "fit_burst_model",
+    "calibrate",
     "TransferPlan",
     "BurstModel",
     "PortedPlan",

@@ -85,12 +85,28 @@ Pipeline (``transform``)
 Autotuner (``autotune``) — the §VI "which layout?" question made a subsystem
     * ``autotune``         — staged search over tilings x extension dirs x
       contiguity levels x port repartitions (``n_ports``), scored by
-      ``BurstModel``, with an on-disk cache.
+      ``BurstModel``, with an on-disk cache; ``score="measured"`` re-ranks
+      the top candidates by measured wall-clock (``SCORE_MODES``).
     * ``LayoutCandidate`` / ``ScoredLayout`` / ``LayoutDecision`` — the search
       space, the per-candidate score, and the ranked result (which carries
       the winning ``PortAssignment`` when ``n_ports > 1``).
     * ``candidate_tilings`` / ``hand_coded_baselines`` — enumeration helpers.
     * ``CacheSchemaError`` — on-disk decision from another cache schema.
+
+Calibration (``calibrate``) — the measured-vs-modeled verification layer
+(the paper validates with *measured* throughput, §VI; Zohouri & Matsuoka
+2019 show why analytic controller models drift)
+    * ``measure_runs`` / ``measure_plan`` — warmup + median-of-k wall-clock
+      of a burst schedule / a whole ``TransferPlan``/``PortedPlan`` on the
+      host backend (one jitted copy per burst = descriptor setup analogue).
+    * ``TransferSample`` / ``fit_burst_model`` / ``CalibratedModel`` — the
+      measured points, the least-squares fit of (setup, peak, port
+      scaling), and the resulting drop-in ``BurstModel``.
+    * ``calibrate`` / ``Calibration`` / ``CalibrationError`` — the full
+      sweep (synthetic grid + Table I plans x storages x ports) and its
+      JSON record with per-plan modeled-vs-measured relative error.
+    * ``measurement_noise`` / ``timing_unusable_reason`` — the host noise
+      probe behind the timing tests' skip-with-reason fixture.
 
 Front-end (``api``/``executors``) — one declarative entry point over it all
     * ``compile``          — layout search + planning + backend selection in
@@ -160,9 +176,22 @@ from .autotune import (
     ScoredLayout,
     LayoutDecision,
     CacheSchemaError,
+    SCORE_MODES,
     autotune,
     candidate_tilings,
     hand_coded_baselines,
+)
+from .calibrate import (
+    TransferSample,
+    CalibratedModel,
+    Calibration,
+    CalibrationError,
+    measure_runs,
+    measure_plan,
+    fit_burst_model,
+    calibrate,
+    measurement_noise,
+    timing_unusable_reason,
 )
 from .transform import CFAPipeline
 from .executors import (
@@ -200,7 +229,10 @@ __all__ = [
     "repartition", "best_repartition", "port_speedup",
     "StencilProgram", "PROGRAMS", "get_program",
     "LayoutCandidate", "ScoredLayout", "LayoutDecision", "CacheSchemaError",
-    "autotune", "candidate_tilings", "hand_coded_baselines",
+    "SCORE_MODES", "autotune", "candidate_tilings", "hand_coded_baselines",
+    "TransferSample", "CalibratedModel", "Calibration", "CalibrationError",
+    "measure_runs", "measure_plan", "fit_burst_model", "calibrate",
+    "measurement_noise", "timing_unusable_reason",
     "CFAPipeline",
     "BackendError", "Executor", "ExecutorCaps", "EXECUTORS",
     "register_executor", "get_executor", "available_backends", "select_backend",

@@ -187,15 +187,42 @@ class CompiledStencil:
         return self.layout.plan(self.space, self.program,
                                 storage=self.storage, codec=self.codec)
 
-    def report(self, model: BurstModel | None = None) -> BandwidthReport:
+    def report(self, model: BurstModel | None = None, *,
+               measured: bool = False, warmup: int | None = None,
+               repeats: int | None = None) -> BandwidthReport:
         """Modeled raw/effective bandwidth of one interior tile under the
         target's burst model (or ``model``); with ``n_ports > 1`` the plan
-        is first repartitioned over the ports (best strategy, §VII)."""
+        is first repartitioned over the ports (best strategy, §VII).
+
+        ``measured=True`` additionally times the exact burst schedule on
+        this host (``calibrate.measure_plan``, warmup + median-of-k) and
+        fills the report's ``measured_time_s`` and ``model_error`` — the
+        modeled time's relative error against the measurement.  When the
+        stencil came from an ``autotune(score="measured")`` decision whose
+        winner is this layout, the decision's stored measurement is reused
+        instead of re-timing.
+        """
         m = model if model is not None else self.target.model
         plan = self.plan
         if self.n_ports > 1:
             plan = best_repartition(plan, self.n_ports, m)
-        return BandwidthReport.evaluate(plan, m)
+        measured_s = None
+        if measured:
+            d = self.decision
+            stored = d.best if (
+                d is not None and d.score == "measured"
+                and model is None and warmup is None and repeats is None
+                and d.best.candidate == self.layout
+                and d.best.measured_time_s is not None
+            ) else None
+            if stored is not None:
+                measured_s = stored.measured_time_s
+            else:
+                from .calibrate import measure_plan
+
+                measured_s = measure_plan(plan, m, warmup=warmup,
+                                          repeats=repeats)
+        return BandwidthReport.evaluate(plan, m, measured_s=measured_s)
 
     def lower(self, backend: str) -> "CompiledStencil":
         """Rebind to another backend (re-validated), jit's ``lower`` spirit:

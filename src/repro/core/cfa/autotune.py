@@ -61,6 +61,7 @@ __all__ = [
     "ScoredLayout",
     "LayoutDecision",
     "CacheSchemaError",
+    "SCORE_MODES",
     "autotune",
     "candidate_tilings",
     "hand_coded_baselines",
@@ -68,6 +69,12 @@ __all__ = [
     "clear_cache",
 ]
 
+# v5: the score axis (modeled / measured wall-clock ranking, see
+# ``calibrate``) — decision-level ``score``, per-candidate
+# measured_time_s/model_error on ScoredLayout, score + host fingerprint +
+# measurement fidelity folded into the cache key, and a loud score-mismatch
+# rejection in the cache loader so modeled- and measured-scored decisions
+# can never be interchanged.
 # v4: storage axis (redundant / irredundant / compressed facet storage,
 # Ferry 2024) — per-candidate footprint/stored_elems/codec_bits fields on
 # ScoredLayout, decision-level storage + footprint_weight, and both folded
@@ -78,7 +85,11 @@ __all__ = [
 # loudly (CacheSchemaError -> warning) instead of silently deserializing.
 # v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
 # and the decision-level n_ports.
-_CACHE_VERSION = 4
+_CACHE_VERSION = 5
+
+# how a candidate's rank is scored: by the analytic BurstModel, or by
+# measured wall-clock of the top modeled candidates (calibrate.measure_plan)
+SCORE_MODES = ("modeled", "measured")
 
 
 class CacheSchemaError(ValueError):
@@ -195,6 +206,11 @@ class ScoredLayout:
     footprint: int | None = None
     stored_elems: int | None = None
     codec_bits: int | None = None
+    # measured scoring (schema v5): wall-clock of this candidate's plan on
+    # this host and the modeled time's relative error against it; filled
+    # for the measured top candidates of an autotune(score="measured") run
+    measured_time_s: float | None = None
+    model_error: float | None = None
 
     @property
     def n_bursts(self) -> int:
@@ -249,10 +265,15 @@ def _rank_key(s: ScoredLayout, footprint_weight: float = 0.0) -> tuple:
     # (to the ``footprint_weight`` power): weight 0 ranks purely by speed,
     # weight 1 by effective bytes/s per slot the layout keeps resident —
     # the footprint axis of the trade-off curve.
+    # Measured candidates (score="measured", schema v5) outrank unmeasured
+    # ones and sort by their wall-clock; in a modeled decision no candidate
+    # carries a measurement, so the leading pair is constant and the order
+    # is the pure-model ranking below.
     eff = s.effective_bw
     if footprint_weight and s.footprint:
         eff = eff / (s.footprint ** footprint_weight)
-    return (-eff, s.n_bursts, s.redundancy, s.candidate.key)
+    measured = (0, s.measured_time_s) if s.measured_time_s is not None else (1, 0.0)
+    return (*measured, -eff, s.n_bursts, s.redundancy, s.candidate.key)
 
 
 # --------------------------------------------------------------------------
@@ -276,6 +297,7 @@ class LayoutDecision:
     storage: str = "redundant"  # facet storage discipline searched under
     codec: str | None = None  # block codec name (storage="compressed" only)
     footprint_weight: float = 0.0  # footprint exponent in the ranking
+    score: str = "modeled"  # ranking basis: analytic model or measured clock
     from_cache: bool = dataclasses.field(default=False, compare=False)
 
     @property
@@ -360,9 +382,10 @@ class LayoutDecision:
         if version != _CACHE_VERSION:
             raise CacheSchemaError(
                 f"autotune cache schema v{version}, need v{_CACHE_VERSION} "
-                f"(v4 records the storage discipline, codec and footprint "
-                f"weight next to the v3 target + backend capability set); "
-                f"delete the stale file or clear_cache() to re-search"
+                f"(v5 records the scoring basis — modeled vs measured "
+                f"wall-clock — next to the v4 storage discipline and the v3 "
+                f"target + backend capability set); delete the stale file "
+                f"or clear_cache() to re-search"
             )
         ranked = []
         for s in d.pop("ranked"):
@@ -391,6 +414,7 @@ class LayoutDecision:
             storage=d.get("storage", "redundant"),
             codec=d.get("codec"),
             footprint_weight=d.get("footprint_weight", 0.0),
+            score=d.get("score", "modeled"),
         )
 
     def summary(self, top: int = 8) -> str:
@@ -400,6 +424,7 @@ class LayoutDecision:
             f"seed={self.seed}  evaluated={self.evaluated} candidates"
             f"{f'  ports={self.n_ports}' if self.n_ports > 1 else ''}"
             f"{f'  storage={self.storage}' if self.storage != 'redundant' else ''}"
+            f"{f'  score={self.score}' if self.score != 'modeled' else ''}"
             f"{'  [cache]' if self.from_cache else ''}",
             f"{'rank':>4} {'eff-bw':>8} {'raw-bw':>8} {'bursts':>6} "
             f"{'redun':>6}  candidate",
@@ -541,8 +566,11 @@ def _cache_key(
     storage: str,
     codec_id: list | None,
     footprint_weight: float,
+    score: str = "modeled",
+    measure_top: int | None = None,
+    measure_kwargs: dict | None = None,
 ) -> str:
-    from .executors import capability_fingerprint
+    from .executors import capability_fingerprint, host_fingerprint
 
     blob = json.dumps(
         {
@@ -567,19 +595,36 @@ def _cache_key(
             "storage": storage,
             "codec": codec_id,
             "footprint_weight": footprint_weight,
+            # the score axis (schema v5): a measured decision is only valid
+            # on the host (and at the measurement fidelity) it was timed on
+            "score": score,
+            "host": host_fingerprint() if score == "measured" else None,
+            "measure_top": measure_top if score == "measured" else None,
+            "measure_kwargs": (sorted((measure_kwargs or {}).items())
+                               if score == "measured" else None),
         },
         sort_keys=True,
     )
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
 
-def _cache_load(path: Path) -> LayoutDecision | None:
+def _cache_load(path: Path, score: str = "modeled") -> LayoutDecision | None:
     try:
         text = path.read_text()
     except OSError:
         return None  # no cache entry for this key
     try:
-        return LayoutDecision.from_json(text)
+        decision = LayoutDecision.from_json(text)
+        if decision.score != score:
+            # modeled- and measured-scored decisions rank by different
+            # objectives; silently serving one for the other would defeat
+            # the whole measured/modeled split — reject loudly instead
+            raise CacheSchemaError(
+                f"cache entry was written with score={decision.score!r} but "
+                f"queried with score={score!r}; measured and modeled "
+                f"rankings are never interchangeable — re-searching"
+            )
+        return decision
     except CacheSchemaError as e:
         # an old-schema decision under this key must not be silently
         # deserialized OR silently dropped: say why a re-search happens
@@ -638,6 +683,9 @@ def autotune(
     storage: str = "redundant",
     codec=None,
     footprint_weight: float = 0.0,
+    score: str = "modeled",
+    measure_top: int = 8,
+    measure_kwargs: dict | None = None,
     cache: bool = True,
     cache_dir: Path | str | None = None,
 ) -> LayoutDecision:
@@ -669,6 +717,17 @@ def autotune(
     ``_rank_key``), so footprint-constrained deployments can trade peak
     speed for smaller resident layouts along a reproducible curve.
 
+    ``score="measured"`` re-ranks the top ``measure_top`` modeled
+    candidates by *measured wall-clock* of their exact burst schedules on
+    this host (``calibrate.measure_plan``; ``measure_kwargs`` forwards
+    ``warmup``/``repeats``): the measured candidates lead the ranking in
+    wall-clock order, each carrying ``measured_time_s`` and the modeled
+    time's relative ``model_error``; unmeasured candidates follow in
+    modeled order.  Measured decisions cache under a key that folds in the
+    host fingerprint and measurement fidelity (schema v5), and the loader
+    rejects any modeled/measured score mismatch loudly — the two rankings
+    are never interchangeable.
+
     Stages 2 and 3 stay within ``budget`` total evaluations (so
     ``decision.evaluated <= max(budget, number of seeds)``).
 
@@ -697,16 +756,22 @@ def autotune(
         raise ValueError(
             f"footprint_weight must be >= 0: {footprint_weight}"
         )
+    if score not in SCORE_MODES:
+        raise ValueError(f"score must be one of {SCORE_MODES}: {score!r}")
+    if measure_top < 1:
+        raise ValueError(f"measure_top must be >= 1: {measure_top}")
     cdc = get_codec(codec) if storage == "compressed" else None
     codec_id = [cdc.name, cdc.bits] if cdc is not None else None
     til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
+    mkw = dict(measure_kwargs or {})
 
     key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
                      max_halo_elems, refine_top, n_ports, port_strategies,
-                     storage, codec_id, footprint_weight)
+                     storage, codec_id, footprint_weight,
+                     score, measure_top, mkw)
     path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
     if cache:
-        hit = _cache_load(path)
+        hit = _cache_load(path, score)
         if hit is not None:
             return dataclasses.replace(hit, from_cache=True)
 
@@ -715,7 +780,7 @@ def autotune(
 
     scored: dict[str, ScoredLayout] = {}
 
-    def score(cand: LayoutCandidate) -> ScoredLayout | None:
+    def score_candidate(cand: LayoutCandidate) -> ScoredLayout | None:
         if cand.key in scored:
             return scored[cand.key]
         try:
@@ -747,7 +812,7 @@ def autotune(
     )
     remaining = max(0, budget - len(scored))
     for t in _sample(all_tilings, remaining * 2 // 3, rng):
-        score(LayoutCandidate("cfa", tuple(t), contiguity="intra-tile"))
+        score_candidate(LayoutCandidate("cfa", tuple(t), contiguity="intra-tile"))
 
     # -- stage 3: layout refinement on the best tilings --------------------
     d = sp.ndim
@@ -768,7 +833,7 @@ def autotune(
             if len(scored) >= budget:
                 break
             blk = tuple(max(1, x // div) for x in t)
-            score(LayoutCandidate("data-tiling", t, block=blk))
+            score_candidate(LayoutCandidate("data-tiling", t, block=blk))
     variants = []
     for t in top_tiles:
         for lvl in contiguity_levels:
@@ -782,7 +847,25 @@ def autotune(
                     variants.append(v)
     remaining = max(0, budget - len(scored))
     for v in _sample(variants, remaining, rng):
-        score(v)
+        score_candidate(v)
+
+    # -- measured re-ranking (score="measured", schema v5) -----------------
+    if score == "measured":
+        from .calibrate import measure_plan
+
+        modeled_order = sorted(scored.values(),
+                               key=lambda s: _rank_key(s, footprint_weight))
+        for s in modeled_order[:measure_top]:
+            plan = s.candidate.plan(sp, prog, storage=storage, codec=cdc)
+            timed_plan: TransferPlan | PortedPlan = plan
+            if n_ports > 1:
+                timed_plan = best_repartition(plan, n_ports, model,
+                                              port_strategies)
+            t_meas = measure_plan(timed_plan, model, **mkw)
+            err = (abs(s.time_s - t_meas) / t_meas) if t_meas > 0 else None
+            scored[s.candidate.key] = dataclasses.replace(
+                s, measured_time_s=t_meas, model_error=err,
+            )
 
     decision = LayoutDecision(
         program=prog.name,
@@ -798,6 +881,7 @@ def autotune(
         storage=storage,
         codec=cdc.name if cdc is not None else None,
         footprint_weight=footprint_weight,
+        score=score,
     )
     if cache:
         _cache_store(path, decision)

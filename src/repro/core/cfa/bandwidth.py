@@ -214,10 +214,16 @@ class BandwidthReport:
     n_ports: int = 1
     storage: str = "redundant"
     footprint: int | None = None  # whole-layout stored elements
+    # measured-vs-modeled verification (``repro.core.cfa.calibrate``):
+    # wall-clock seconds of the same schedule on this host, and the
+    # modeled time's relative error against it; None when not measured
+    measured_time_s: float | None = None
+    model_error: float | None = None
 
     @staticmethod
     def evaluate(
-        plan: "TransferPlan | PortedPlan", model: BurstModel
+        plan: "TransferPlan | PortedPlan", model: BurstModel,
+        measured_s: float | None = None,
     ) -> "BandwidthReport":
         """Bandwidth of a plan under ``model``.
 
@@ -229,10 +235,17 @@ class BandwidthReport:
         port) while ``effective_bw`` counts the logical bytes delivered —
         compression can push it past the wire peak, which is the point of
         the Ferry-2024 layout.
+
+        ``measured_s`` (a wall-clock measurement of the same schedule, see
+        ``calibrate.measure_plan``) fills ``measured_time_s`` and the
+        modeled time's relative error ``model_error``.
         """
         t = model.time(plan)
         raw = model.plan_bytes(plan) / t if t else 0.0
         eff = plan.useful * model.elem_bytes / t if t else 0.0
+        err = None
+        if measured_s is not None and measured_s > 0.0:
+            err = abs(t - measured_s) / measured_s
         return BandwidthReport(
             scheme=plan.scheme,
             model=model.name,
@@ -245,4 +258,6 @@ class BandwidthReport:
             n_ports=getattr(plan, "n_ports", 1),
             storage=getattr(plan, "storage", "redundant"),
             footprint=getattr(plan, "footprint", None),
+            measured_time_s=measured_s,
+            model_error=err,
         )

@@ -49,6 +49,7 @@ __all__ = [
     "select_backend",
     "check_backend",
     "capability_fingerprint",
+    "host_fingerprint",
 ]
 
 
@@ -316,6 +317,34 @@ def select_backend(
             and storage in EXECUTORS["pallas"].caps.storages):
         return "pallas"
     return "wavefront"
+
+
+def host_fingerprint() -> list[list[str]]:
+    """Stable identity of the machine a measurement ran on.
+
+    Folded into the autotune cache key for ``score="measured"`` decisions
+    (cache schema v5): a wall-clock ranking measured on one host must not
+    be silently reused on another, the exact failure mode the analytic
+    model never has.  The jax device is resolved lazily — calling this
+    initialises the backend, which measured scoring needs anyway.
+    """
+    import platform
+
+    import jax
+
+    try:
+        dev = jax.devices()[0]
+        device = getattr(dev, "device_kind", None) or str(dev)
+    except RuntimeError:
+        device = "none"
+    return [
+        ["machine", platform.machine()],
+        ["system", platform.system()],
+        ["python", platform.python_version()],
+        ["jax", jax.__version__],
+        ["backend", jax.default_backend()],
+        ["device", device],
+    ]
 
 
 def capability_fingerprint() -> list[list]:

@@ -248,6 +248,8 @@ def best_repartition(
     n_ports: int,
     model: BurstModel,
     strategies: Sequence[str] = PORT_STRATEGIES,
+    *,
+    time_fn=None,
 ) -> PortedPlan:
     """The fastest repartition of ``plan`` over up to ``n_ports`` ports.
 
@@ -259,7 +261,13 @@ def best_repartition(
     without facet attribution; when *no* requested strategy applies (e.g.
     facet-only strategies on a baseline plan) the trivial single-port
     schedule — always legal — is returned with strategy ``"single-port"``.
+
+    ``time_fn`` overrides how candidate :class:`PortedPlan`\\ s are scored
+    (default ``model.time``) — e.g. ``calibrate.measure_plan`` to pick the
+    repartition by measured wall-clock instead of the analytic model.  The
+    ``model`` still weights the LPT bin-packing inside each strategy.
     """
+    score = time_fn if time_fn is not None else model.time
     best: PortedPlan | None = None
     best_key: tuple | None = None
     for p in range(1, n_ports + 1):
@@ -268,7 +276,7 @@ def best_repartition(
                 pp = repartition(plan, p, strat, model=model)
             except ValueError:
                 continue
-            key = (model.time(pp), si, p)
+            key = (score(pp), si, p)
             if best_key is None or key < best_key:
                 best, best_key = pp, key
     if best is None:

@@ -8,8 +8,10 @@ import functools
 import os
 import subprocess
 import sys
+import types
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
 
@@ -48,3 +50,60 @@ def multidevice_emulation_reason() -> str | None:
             f"(got {n} device(s), need >= 4)"
         )
     return None
+
+
+@functools.lru_cache(maxsize=1)
+def timing_test_reason() -> str | None:
+    """None when wall-clock measurement is trustworthy here, else why not.
+
+    Same pattern as ``multidevice_emulation_reason``: the timing tests
+    (test_calibration.py) must *skip with a reason* on hosts whose clock
+    resolution or scheduling noise makes a median-of-k sample unusable,
+    never flake.  ``REPRO_TIMING_TESTS=skip|force`` overrides the probe.
+    """
+    from repro.core.cfa.calibrate import timing_unusable_reason
+
+    return timing_unusable_reason()
+
+
+@pytest.fixture
+def measured_timer():
+    """Deterministic-enough measurement: warmup + median-of-k helpers.
+
+    Skips (with the probe's reason) when this host cannot time reliably.
+    The returned namespace carries ``measure_runs``/``measure_plan`` bound
+    to a slightly higher default fidelity than the library's
+    (median-of-7 unless ``REPRO_MEASURE_REPEATS`` overrides), the host's
+    measured relative ``noise``, and a derived comparison ``tolerance``
+    factor: two measurements closer than ``tolerance`` x their magnitude
+    are indistinguishable on this host.
+    """
+    reason = timing_test_reason()
+    if reason is not None:
+        pytest.skip(f"timing unusable on this host: {reason}")
+    from repro.core.cfa.calibrate import (measure_plan as _measure_plan,
+                                          measure_runs as _measure_runs,
+                                          measurement_noise)
+
+    warmup = int(os.environ.get("REPRO_MEASURE_WARMUP", 1))
+    repeats = int(os.environ.get("REPRO_MEASURE_REPEATS", 7))
+
+    def measure_runs(runs, elem_bytes=8, **kw):
+        kw.setdefault("warmup", warmup)
+        kw.setdefault("repeats", repeats)
+        return _measure_runs(runs, elem_bytes, **kw)
+
+    def measure_plan(plan, model, **kw):
+        kw.setdefault("warmup", warmup)
+        kw.setdefault("repeats", repeats)
+        return _measure_plan(plan, model, **kw)
+
+    noise = measurement_noise()
+    return types.SimpleNamespace(
+        measure_runs=measure_runs,
+        measure_plan=measure_plan,
+        warmup=warmup,
+        repeats=repeats,
+        noise=noise,
+        tolerance=max(0.35, 2.0 * noise),
+    )

@@ -369,6 +369,8 @@ PUBLIC_API = [
     "CFAPipeline",
     "CODECS",
     "CacheSchemaError",
+    "CalibratedModel",
+    "Calibration",
     "CompiledStencil",
     "Deps",
     "EXECUTORS",
@@ -379,6 +381,7 @@ PUBLIC_API = [
     "LayoutDecision",
     "PROGRAMS",
     "PortedPlan",
+    "SCORE_MODES",
     "STORAGE_MODES",
     "ScoredLayout",
     "StencilProgram",
@@ -388,15 +391,20 @@ PUBLIC_API = [
     "Target",
     "Tiling",
     "TransferPlan",
+    "TransferSample",
     "autotune",
     "available_backends",
     "build_storage_map",
+    "calibrate",
     "compile",
     "dedup_facets",
+    "fit_burst_model",
     "get_codec",
     "get_executor",
     "get_program",
     "get_target",
+    "measure_plan",
+    "measure_runs",
     "register_executor",
     "register_target",
     "rehydrate_facets",

@@ -129,6 +129,66 @@ def test_cache_key_records_backend_capability_set(tmp_path):
     assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
 
 
+# a cheap measured pass for the cache-split tests: tiny program, one repeat
+_MEASURED_KW = dict(score="measured", measure_top=2,
+                    measure_kwargs=dict(warmup=0, repeats=1))
+
+
+def test_measured_and_modeled_cache_keys_are_disjoint(tmp_path):
+    """Schema v5: the score axis (plus host fingerprint) is folded into the
+    cache key, so a modeled decision can never be served for a measured
+    query (or vice versa) — each query is a miss in the other's cache."""
+    prog = PROGRAMS["heat1d"]
+    kw = dict(budget=8, seed=0, cache_dir=tmp_path)
+    modeled = autotune(prog, (8, 64), AXI_ZC706, **kw)
+    assert not modeled.from_cache
+    measured = autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW)
+    assert not measured.from_cache  # distinct key: no crosstalk
+    assert measured.score == "measured"
+    # both populated their own keys: each repeat query is now a clean hit
+    assert autotune(prog, (8, 64), AXI_ZC706, **kw).from_cache
+    assert autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW).from_cache
+
+
+def test_modeled_entry_at_measured_key_rejected_loudly(tmp_path):
+    """Schema v5: an entry whose recorded score disagrees with the query
+    (e.g. written by a buggy tool under the wrong key) warns and re-searches
+    instead of silently serving the wrong ranking objective."""
+    import json
+
+    from repro.core.cfa.autotune import _cache_load
+
+    prog = PROGRAMS["heat1d"]
+    kw = dict(budget=8, seed=0, cache_dir=tmp_path)
+    first = autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW)
+    (entry,) = tmp_path.glob("*.json")
+    blob = json.loads(entry.read_text())
+    assert blob["score"] == "measured"
+    blob["score"] = "modeled"  # forge a modeled decision under the measured key
+    entry.write_text(json.dumps(blob))
+    assert _cache_load(entry, "modeled") is not None  # the forgery is valid JSON
+    with pytest.warns(RuntimeWarning, match="score='modeled'.*score='measured'"):
+        redo = autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW)
+    assert not redo.from_cache
+    assert redo.best.candidate == first.best.candidate
+    # the re-search overwrote the forged entry: next call is a clean hit
+    assert autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW).from_cache
+
+
+def test_decision_records_score_and_roundtrips(tmp_path):
+    """The decision carries its scoring mode: 'modeled' by default, and the
+    mode survives the JSON round-trip either way."""
+    prog = PROGRAMS["heat1d"]
+    kw = dict(budget=8, seed=0, cache=False, cache_dir=tmp_path)
+    modeled = autotune(prog, (8, 64), AXI_ZC706, **kw)
+    assert modeled.score == "modeled"
+    assert LayoutDecision.from_json(modeled.to_json()).score == "modeled"
+    measured = autotune(prog, (8, 64), AXI_ZC706, **kw, **_MEASURED_KW)
+    assert measured.score == "measured"
+    assert LayoutDecision.from_json(measured.to_json()).score == "measured"
+    assert any(s.measured_time_s is not None for s in measured.ranked)
+
+
 # ---------------------------------------------------------------------------
 # quality: never worse than the hand-coded plans (the acceptance criterion)
 # ---------------------------------------------------------------------------

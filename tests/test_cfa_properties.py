@@ -271,6 +271,132 @@ def test_irredundant_sweep_matches_redundant_random_tilings(data):
         assert (np.asarray(rh[k]) == np.asarray(f_red[k])).all(), f"facet {k}"
 
 
+# ---------------------------------------------------------------------------
+# Calibration layer (measured-vs-modeled): model + fit invariants
+# ---------------------------------------------------------------------------
+
+run_lengths = st.lists(st.integers(1, 1 << 16), min_size=1, max_size=32)
+codec_bits_or_none = st.sampled_from([None, 4, 8, 16, 32])
+
+
+@given(runs=run_lengths, bits=codec_bits_or_none, grow=st.integers(1, 1 << 12),
+       at=st.integers(0, 31))
+@settings(max_examples=60, deadline=None)
+def test_time_s_monotone_in_run_lengths(runs, bits, grow, at):
+    """Lengthening any single run never makes the modeled schedule faster."""
+    at %= len(runs)
+    longer = tuple(r + grow if i == at else r for i, r in enumerate(runs))
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        assert model.time_s(longer, bits) >= model.time_s(tuple(runs), bits)
+
+
+@given(n=st.integers(2, 1 << 16), cut=st.integers(1, (1 << 16) - 1),
+       bits=codec_bits_or_none)
+@settings(max_examples=60, deadline=None)
+def test_burst_bytes_superadditive_under_run_splitting(n, cut, bits):
+    """Splitting one run into two never shrinks the wire bytes (compression
+    headers are per burst) and strictly adds a setup to the modeled time —
+    the first-order reason CFA prefers few long bursts (§II-E)."""
+    cut %= n
+    if cut == 0:
+        cut = 1
+    a, b = cut, n - cut
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        whole = model.burst_bytes(n, bits)
+        split = model.burst_bytes(a, bits) + model.burst_bytes(b, bits)
+        assert split >= whole - 1e-9
+        t_whole = model.time_s((n,), bits)
+        t_split = model.time_s((a, b), bits)
+        assert t_split >= t_whole + model.setup_s - 1e-15
+
+
+@given(n=st.integers(1, 1 << 16), bits=st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_compressed_burst_bytes_at_least_header_floor(n, bits):
+    """A compressed burst always carries at least its raw header word, and
+    never exceeds the uncompressed burst's bytes."""
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        got = model.burst_bytes(n, bits)
+        assert got >= model.elem_bytes  # one raw header word minimum
+        assert got <= model.burst_bytes(n, None) + 1e-9
+
+
+@given(
+    setup_s=st.floats(1e-9, 1e-5),
+    peak=st.floats(1e8, 1e12),
+    elem_bytes=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_fit_burst_model_recovers_random_true_model(setup_s, peak, elem_bytes,
+                                                    seed):
+    """Fitting noiseless samples synthesized from a random 'true' BurstModel
+    must return a physical model (setup >= 0, peak > 0) whose predictions
+    round-trip to the samples within a tight relative tolerance."""
+    import numpy as np
+
+    from repro.core.cfa import BurstModel
+    from repro.core.cfa.calibrate import TransferSample, fit_burst_model
+
+    true = BurstModel(name="true", peak_bytes_per_s=peak, setup_s=setup_s,
+                      elem_bytes=elem_bytes)
+    rng = np.random.default_rng(seed)
+    # anchors condition the two regressors (burst count vs byte volume);
+    # the random schedules fuzz everything in between
+    schedules = [(1,), (1,) * 16, (65536,)]
+    schedules += [
+        tuple(int(x) for x in rng.integers(1, 8192, size=rng.integers(1, 12)))
+        for _ in range(5)
+    ]
+    samples = [
+        TransferSample(runs_by_port=(tuple(s),), elem_bytes=elem_bytes,
+                       measured_s=true.time_s(tuple(s)), label="synth")
+        for s in schedules
+    ]
+    fit = fit_burst_model(samples, true)
+    assert fit.setup_s >= 0.0
+    assert fit.peak_bytes_per_s > 0.0
+    assert fit.elem_bytes == elem_bytes
+    for s in samples:
+        want = s.measured_s
+        got = fit.time_s(s.runs)
+        assert got == pytest.approx(want, rel=1e-4), (
+            f"fit {got:.3e} vs true {want:.3e} on {s.runs[:4]}..."
+        )
+
+
+@given(
+    factors=st.lists(
+        st.tuples(st.integers(2, 16), st.floats(0.25, 4.0)),
+        min_size=1, max_size=5,
+        unique_by=lambda pf: pf[0],
+    ),
+    query=st.integers(1, 32),
+)
+@settings(max_examples=60, deadline=None)
+def test_calibrated_model_port_factor_properties(factors, query):
+    """port_factor(1) is always 1; any other query resolves to the nearest
+    calibrated port count (ties toward the smaller count), so predictions
+    never extrapolate outside the measured factor range."""
+    from repro.core.cfa.calibrate import CalibratedModel
+
+    cm = CalibratedModel(
+        name="cal", peak_bytes_per_s=AXI_ZC706.peak_bytes_per_s,
+        setup_s=AXI_ZC706.setup_s, elem_bytes=AXI_ZC706.elem_bytes,
+        port_factors=tuple(sorted(factors)), base_name=AXI_ZC706.name,
+    )
+    assert cm.port_factor(1) == 1.0
+    got = cm.port_factor(query)
+    if query == 1:
+        assert got == 1.0
+    else:
+        table = dict(cm.port_factors)
+        best = min(table, key=lambda p: (abs(p - query), p))
+        assert got == table[best]
+        lo, hi = min(table.values()), max(table.values())
+        assert lo <= got <= hi
+
+
 @given(
     nt=st.tuples(*[st.integers(1, 3)] * 3),
     seed=st.integers(0, 2**31 - 1),
