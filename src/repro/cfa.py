@@ -66,6 +66,7 @@ from repro.core.cfa import (
     BurstModel,
     PortedPlan,
     BandwidthReport,
+    overlap_speedup,
     # facet storage disciplines (compile(storage=...), Ferry 2024)
     STORAGE_MODES,
     StorageMap,
@@ -119,6 +120,7 @@ __all__ = [
     "BurstModel",
     "PortedPlan",
     "BandwidthReport",
+    "overlap_speedup",
     "STORAGE_MODES",
     "StorageMap",
     "build_storage_map",

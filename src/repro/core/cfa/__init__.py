@@ -61,9 +61,11 @@ Burst plans (``plans``)
 Bandwidth model (``bandwidth``)
     * ``BurstModel``      — ``time = sum(T_setup + bytes/BW)`` per burst (§II-E);
       ``BurstModel.time`` of a ``PortedPlan`` is the max over per-port
-      schedules (ports run concurrently, §VII).
+      schedules (ports run concurrently, §VII); ``time(..., compute_s=...,
+      overlap=True)`` composes the Fig. 13 DATAFLOW pipelined tile time.
     * ``PortedPlan``      — a plan's bursts repartitioned over n ports (§VII).
     * ``BandwidthReport`` — raw/effective bandwidth of a plan (Fig. 15 axes).
+    * ``overlap_speedup`` — modeled overlapped-vs-sequential gain of a plan.
     * ``AXI_ZC706``       — the paper's ZC706 AXI HP port model (§VI-A).
     * ``TPU_V5E_HBM``     — the TPU DMA adaptation target (§VI-A analogue).
 
@@ -161,7 +163,14 @@ from .plans import (
     data_tiling_plan,
     interior_tile,
 )
-from .bandwidth import BurstModel, PortedPlan, BandwidthReport, AXI_ZC706, TPU_V5E_HBM
+from .bandwidth import (
+    BurstModel,
+    PortedPlan,
+    BandwidthReport,
+    AXI_ZC706,
+    TPU_V5E_HBM,
+    overlap_speedup,
+)
 from .multiport import (
     PortAssignment,
     PORT_STRATEGIES,
@@ -225,6 +234,7 @@ __all__ = [
     "TransferPlan", "count_runs", "cfa_plan", "cfa_piece_census", "original_layout_plan",
     "bounding_box_plan", "data_tiling_plan", "interior_tile",
     "BurstModel", "PortedPlan", "BandwidthReport", "AXI_ZC706", "TPU_V5E_HBM",
+    "overlap_speedup",
     "PortAssignment", "PORT_STRATEGIES", "assign_ports",
     "repartition", "best_repartition", "port_speedup",
     "StencilProgram", "PROGRAMS", "get_program",

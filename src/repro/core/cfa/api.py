@@ -44,6 +44,7 @@ from .plans import TransferPlan
 from .programs import StencilProgram, get_program
 from .spaces import IterSpace, Tiling
 from .executors import (
+    BackendError,
     Executor,
     check_backend,
     get_executor,
@@ -189,7 +190,9 @@ class CompiledStencil:
 
     def report(self, model: BurstModel | None = None, *,
                measured: bool = False, warmup: int | None = None,
-               repeats: int | None = None) -> BandwidthReport:
+               repeats: int | None = None,
+               compute_s: float = 0.0,
+               overlap: bool | None = None) -> BandwidthReport:
         """Modeled raw/effective bandwidth of one interior tile under the
         target's burst model (or ``model``); with ``n_ports > 1`` the plan
         is first repartitioned over the ports (best strategy, §VII).
@@ -201,17 +204,27 @@ class CompiledStencil:
         stencil came from an ``autotune(score="measured")`` decision whose
         winner is this layout, the decision's stored measurement is reused
         instead of re-timing.
+
+        ``compute_s`` folds that much per-tile compute into the tile time;
+        ``overlap`` (default: whether the bound backend declares
+        ``ExecutorCaps.overlap``, i.e. True under ``backend="dataflow"``)
+        picks the sequential sum or the Fig. 13 DATAFLOW pipelined
+        composition — see ``BurstModel.time``.
         """
         m = model if model is not None else self.target.model
+        if overlap is None:
+            overlap = self.executor.caps.overlap
         plan = self.plan
         if self.n_ports > 1:
-            plan = best_repartition(plan, self.n_ports, m)
+            plan = best_repartition(plan, self.n_ports, m,
+                                    compute_s=compute_s, overlap=overlap)
         measured_s = None
         if measured:
             d = self.decision
             stored = d.best if (
                 d is not None and d.score == "measured"
                 and model is None and warmup is None and repeats is None
+                and compute_s == 0.0 and overlap == d.overlap
                 and d.best.candidate == self.layout
                 and d.best.measured_time_s is not None
             ) else None
@@ -221,8 +234,11 @@ class CompiledStencil:
                 from .calibrate import measure_plan
 
                 measured_s = measure_plan(plan, m, warmup=warmup,
-                                          repeats=repeats)
-        return BandwidthReport.evaluate(plan, m, measured_s=measured_s)
+                                          repeats=repeats,
+                                          compute_s=compute_s,
+                                          overlap=overlap)
+        return BandwidthReport.evaluate(plan, m, measured_s=measured_s,
+                                        compute_s=compute_s, overlap=overlap)
 
     def lower(self, backend: str) -> "CompiledStencil":
         """Rebind to another backend (re-validated), jit's ``lower`` spirit:
@@ -320,6 +336,7 @@ def compile(
     backend: str = "auto",
     storage: str = "redundant",
     codec: "BlockCodec | str | None" = None,
+    overlap: bool = False,
     autotune_kwargs: Mapping | None = None,
 ) -> CompiledStencil:
     """Compile ``program`` on ``space`` into an executable stencil.
@@ -336,8 +353,13 @@ def compile(
       layout at that tile).
     * ``backend`` — a registered executor name, or ``"auto"``
       (:func:`repro.core.cfa.executors.select_backend`: sharded when
-      ``n_ports > 1``, pallas on 3-D when it implements the storage,
-      wavefront otherwise).
+      ``n_ports > 1``, dataflow when ``overlap=True``, pallas on 3-D when
+      it implements the storage, wavefront otherwise).
+    * ``overlap`` — request a backend that pipelines fetch/compute/commit
+      (Fig. 13 DATAFLOW).  With ``backend="auto"`` this selects
+      ``dataflow``; an explicit sequential backend is rejected loudly.
+      (To also *rank layouts* by overlapped time, pass
+      ``autotune_kwargs=dict(overlap=True, compute_per_elem_s=...)``.)
     * ``storage`` — the facet storage discipline (Ferry 2024):
       ``"redundant"`` (the paper's duplicated layout, default),
       ``"irredundant"`` (each value stored exactly once; halo reads take
@@ -374,10 +396,16 @@ def compile(
         )
     cdc = get_codec(codec) if storage == "compressed" else None
 
-    name = (select_backend(prog, sp, n_ports, storage)
+    name = (select_backend(prog, sp, n_ports, storage, overlap)
             if backend == "auto" else backend)
     ex = get_executor(name)
     check_backend(ex, prog, sp, n_ports, storage)
+    if overlap and not ex.caps.overlap:
+        raise BackendError(
+            f"overlap=True needs a backend that pipelines fetch/compute/"
+            f"commit, but {name!r} runs its phases sequentially; use "
+            f'backend="dataflow" (or "auto")'
+        )
 
     cand, decision = _resolve_layout(layout, prog, sp, tgt, n_ports,
                                      storage, cdc, autotune_kwargs)

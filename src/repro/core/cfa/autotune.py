@@ -69,6 +69,11 @@ __all__ = [
     "clear_cache",
 ]
 
+# v6: the dataflow overlap axis (Fig. 13 DATAFLOW, ``backend="dataflow"``)
+# — decision-level ``overlap`` + ``compute_per_elem_s`` knobs, per-candidate
+# overlap/compute_s fields on ScoredLayout (time_s becomes the overlapped
+# tile time when enabled), both folded into the cache key; the executor
+# capability fingerprint also grew the per-backend overlap flag.
 # v5: the score axis (modeled / measured wall-clock ranking, see
 # ``calibrate``) — decision-level ``score``, per-candidate
 # measured_time_s/model_error on ScoredLayout, score + host fingerprint +
@@ -85,7 +90,7 @@ __all__ = [
 # loudly (CacheSchemaError -> warning) instead of silently deserializing.
 # v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
 # and the decision-level n_ports.
-_CACHE_VERSION = 5
+_CACHE_VERSION = 6
 
 # how a candidate's rank is scored: by the analytic BurstModel, or by
 # measured wall-clock of the top modeled candidates (calibrate.measure_plan)
@@ -211,6 +216,11 @@ class ScoredLayout:
     # for the measured top candidates of an autotune(score="measured") run
     measured_time_s: float | None = None
     model_error: float | None = None
+    # dataflow axis (schema v6): the per-tile compute seconds folded into
+    # time_s, and whether the transfer was overlapped with it (Fig. 13
+    # DATAFLOW — the schedule backend="dataflow" runs)
+    overlap: bool = False
+    compute_s: float = 0.0
 
     @property
     def n_bursts(self) -> int:
@@ -224,13 +234,17 @@ class ScoredLayout:
         *,
         n_ports: int = 1,
         port_strategies: Sequence[str] = PORT_STRATEGIES,
+        overlap: bool = False,
+        compute_s: float = 0.0,
     ) -> "ScoredLayout":
-        t = t_single = model.time(plan)
+        tkw = dict(compute_s=compute_s, overlap=overlap)
+        t = t_single = model.time(plan, **tkw)
         ports: dict = {}
         scored_plan: TransferPlan | PortedPlan = plan
         if n_ports > 1:
-            pp = best_repartition(plan, n_ports, model, port_strategies)
-            t = model.time(pp)
+            pp = best_repartition(plan, n_ports, model, port_strategies,
+                                  **tkw)
+            t = model.time(pp, **tkw)
             scored_plan = pp
             ports = dict(
                 n_ports=n_ports,
@@ -239,8 +253,10 @@ class ScoredLayout:
                 port_balance=pp.balance,
                 port_speedup_vs_single=t_single / t if t else 1.0,
             )
-        rep = BandwidthReport.evaluate(scored_plan, model)
+        rep = BandwidthReport.evaluate(scored_plan, model, **tkw)
         return ScoredLayout(
+            overlap=overlap,
+            compute_s=compute_s,
             candidate=candidate,
             n_read_bursts=plan.n_read_bursts,
             n_write_bursts=plan.n_write_bursts,
@@ -298,6 +314,10 @@ class LayoutDecision:
     codec: str | None = None  # block codec name (storage="compressed" only)
     footprint_weight: float = 0.0  # footprint exponent in the ranking
     score: str = "modeled"  # ranking basis: analytic model or measured clock
+    # dataflow axis (schema v6): rank by the overlapped tile time with this
+    # much compute per tile element (seconds)
+    overlap: bool = False
+    compute_per_elem_s: float = 0.0
     from_cache: bool = dataclasses.field(default=False, compare=False)
 
     @property
@@ -382,8 +402,9 @@ class LayoutDecision:
         if version != _CACHE_VERSION:
             raise CacheSchemaError(
                 f"autotune cache schema v{version}, need v{_CACHE_VERSION} "
-                f"(v5 records the scoring basis — modeled vs measured "
-                f"wall-clock — next to the v4 storage discipline and the v3 "
+                f"(v6 adds the dataflow overlap axis — overlap flag + "
+                f"per-tile-element compute seconds — on top of the v5 "
+                f"scoring basis, the v4 storage discipline and the v3 "
                 f"target + backend capability set); delete the stale file "
                 f"or clear_cache() to re-search"
             )
@@ -415,6 +436,8 @@ class LayoutDecision:
             codec=d.get("codec"),
             footprint_weight=d.get("footprint_weight", 0.0),
             score=d.get("score", "modeled"),
+            overlap=d.get("overlap", False),
+            compute_per_elem_s=d.get("compute_per_elem_s", 0.0),
         )
 
     def summary(self, top: int = 8) -> str:
@@ -425,6 +448,7 @@ class LayoutDecision:
             f"{f'  ports={self.n_ports}' if self.n_ports > 1 else ''}"
             f"{f'  storage={self.storage}' if self.storage != 'redundant' else ''}"
             f"{f'  score={self.score}' if self.score != 'modeled' else ''}"
+            f"{'  overlap' if self.overlap else ''}"
             f"{'  [cache]' if self.from_cache else ''}",
             f"{'rank':>4} {'eff-bw':>8} {'raw-bw':>8} {'bursts':>6} "
             f"{'redun':>6}  candidate",
@@ -500,6 +524,8 @@ def hand_coded_baselines(
     port_strategies: Sequence[str] = PORT_STRATEGIES,
     storage: str = "redundant",
     codec=None,
+    overlap: bool = False,
+    compute_per_elem_s: float = 0.0,
 ) -> dict[str, ScoredLayout]:
     """The paper's hand-coded plans at one tile size, scored under ``model``.
 
@@ -524,6 +550,8 @@ def hand_coded_baselines(
         out[name] = ScoredLayout.from_plan(
             cand, cand.plan(space, program, storage=storage, codec=codec),
             model, n_ports=n_ports, port_strategies=port_strategies,
+            overlap=overlap,
+            compute_s=compute_per_elem_s * math.prod(cand.tile),
         )
     return out
 
@@ -569,6 +597,8 @@ def _cache_key(
     score: str = "modeled",
     measure_top: int | None = None,
     measure_kwargs: dict | None = None,
+    overlap: bool = False,
+    compute_per_elem_s: float = 0.0,
 ) -> str:
     from .executors import capability_fingerprint, host_fingerprint
 
@@ -602,6 +632,9 @@ def _cache_key(
             "measure_top": measure_top if score == "measured" else None,
             "measure_kwargs": (sorted((measure_kwargs or {}).items())
                                if score == "measured" else None),
+            # the dataflow overlap axis (schema v6)
+            "overlap": overlap,
+            "compute_per_elem_s": compute_per_elem_s,
         },
         sort_keys=True,
     )
@@ -686,6 +719,8 @@ def autotune(
     score: str = "modeled",
     measure_top: int = 8,
     measure_kwargs: dict | None = None,
+    overlap: bool = False,
+    compute_per_elem_s: float = 0.0,
     cache: bool = True,
     cache_dir: Path | str | None = None,
 ) -> LayoutDecision:
@@ -728,6 +763,15 @@ def autotune(
     rejects any modeled/measured score mismatch loudly — the two rankings
     are never interchangeable.
 
+    ``overlap=True`` ranks every candidate by its *overlapped* tile time
+    (Fig. 13 DATAFLOW — the ``backend="dataflow"`` schedule), with
+    ``compute_per_elem_s`` seconds of tile compute per tile element
+    (per-candidate ``compute_s`` = rate x tile volume, so bigger tiles
+    carry proportionally more compute to hide transfers behind).  Under
+    overlap the search prefers layouts whose transfer fits under the
+    compute shadow instead of the absolutely shortest transfer — a
+    different optimum whenever compute is non-trivial (schema v6).
+
     Stages 2 and 3 stay within ``budget`` total evaluations (so
     ``decision.evaluated <= max(budget, number of seeds)``).
 
@@ -760,6 +804,10 @@ def autotune(
         raise ValueError(f"score must be one of {SCORE_MODES}: {score!r}")
     if measure_top < 1:
         raise ValueError(f"measure_top must be >= 1: {measure_top}")
+    if compute_per_elem_s < 0:
+        raise ValueError(
+            f"compute_per_elem_s must be >= 0: {compute_per_elem_s}"
+        )
     cdc = get_codec(codec) if storage == "compressed" else None
     codec_id = [cdc.name, cdc.bits] if cdc is not None else None
     til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
@@ -768,7 +816,8 @@ def autotune(
     key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
                      max_halo_elems, refine_top, n_ports, port_strategies,
                      storage, codec_id, footprint_weight,
-                     score, measure_top, mkw)
+                     score, measure_top, mkw,
+                     overlap, compute_per_elem_s)
     path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
     if cache:
         hit = _cache_load(path, score)
@@ -789,8 +838,11 @@ def autotune(
             return None  # illegal candidate (e.g. w > t); skip
         # (AssertionError deliberately propagates: it flags a layout bug,
         # e.g. a non-contiguous facet write, never an illegal candidate.)
-        s = ScoredLayout.from_plan(cand, plan, model, n_ports=n_ports,
-                                   port_strategies=port_strategies)
+        s = ScoredLayout.from_plan(
+            cand, plan, model, n_ports=n_ports,
+            port_strategies=port_strategies, overlap=overlap,
+            compute_s=compute_per_elem_s * math.prod(cand.tile),
+        )
         scored[cand.key] = s
         return s
 
@@ -802,7 +854,9 @@ def autotune(
     if default_tile_ok:
         seeds = hand_coded_baselines(prog, sp, model, n_ports=n_ports,
                                      port_strategies=port_strategies,
-                                     storage=storage, codec=cdc)
+                                     storage=storage, codec=cdc,
+                                     overlap=overlap,
+                                     compute_per_elem_s=compute_per_elem_s)
         for s in seeds.values():
             scored.setdefault(s.candidate.key, s)
 
@@ -858,10 +912,13 @@ def autotune(
         for s in modeled_order[:measure_top]:
             plan = s.candidate.plan(sp, prog, storage=storage, codec=cdc)
             timed_plan: TransferPlan | PortedPlan = plan
+            c_s = compute_per_elem_s * math.prod(s.candidate.tile)
             if n_ports > 1:
                 timed_plan = best_repartition(plan, n_ports, model,
-                                              port_strategies)
-            t_meas = measure_plan(timed_plan, model, **mkw)
+                                              port_strategies,
+                                              compute_s=c_s, overlap=overlap)
+            t_meas = measure_plan(timed_plan, model, compute_s=c_s,
+                                  overlap=overlap, **mkw)
             err = (abs(s.time_s - t_meas) / t_meas) if t_meas > 0 else None
             scored[s.candidate.key] = dataclasses.replace(
                 s, measured_time_s=t_meas, model_error=err,
@@ -882,6 +939,8 @@ def autotune(
         codec=cdc.name if cdc is not None else None,
         footprint_weight=footprint_weight,
         score=score,
+        overlap=overlap,
+        compute_per_elem_s=compute_per_elem_s,
     )
     if cache:
         _cache_store(path, decision)

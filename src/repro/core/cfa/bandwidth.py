@@ -22,6 +22,18 @@ data over each memory port to balance accesses").  The repartition strategies
 that produce a :class:`PortedPlan` from a :class:`TransferPlan` live in
 ``repro.core.cfa.multiport``.
 
+**Dataflow overlap (Fig. 13 DATAFLOW).**  The paper's accelerator template
+runs READ / EXECUTE / WRITE as concurrent dataflow stages, so a tile's
+transfer hides behind the previous tile's compute.  ``time`` therefore takes
+a per-tile compute term and an ``overlap=`` mode: sequential phases cost
+``transfer + compute``; overlapped phases cost the pipeline fill (one burst
+setup — the prologue no double-buffer can hide) plus the max of the
+remaining transfer and the compute, i.e. ``min(setup, T) + max(T - min(setup,
+T), C)``.  The overlapped time is bounded below by ``max(transfer, compute)``
+and above by the sequential sum, and equals the plain transfer time when
+``compute_s`` is zero.  ``overlap_speedup`` reports the modeled gain; the
+``backend="dataflow"`` executor realises the schedule.
+
 Two presets:
 
 * ``AXI_ZC706``  — the paper's platform (calibration target for Fig. 15).
@@ -41,6 +53,7 @@ __all__ = [
     "AXI_ZC706",
     "TPU_V5E_HBM",
     "BandwidthReport",
+    "overlap_speedup",
 ]
 
 
@@ -150,8 +163,8 @@ class BurstModel:
             for r in runs
         )
 
-    def time(self, plan: "TransferPlan | PortedPlan") -> float:
-        """Modeled transfer time of a whole plan.
+    def transfer_time_s(self, plan: "TransferPlan | PortedPlan") -> float:
+        """Modeled transfer time of a whole plan (no compute term).
 
         Single-port :class:`TransferPlan`: sum over all bursts.  Multi-port
         :class:`PortedPlan`: ports transfer concurrently, so the tile waits
@@ -169,6 +182,32 @@ class BurstModel:
                                   plan.write_runs_by_port, strict=True)
             )
         return self.time_s(plan.read_runs, cb) + self.time_s(plan.write_runs, cb)
+
+    def time(
+        self, plan: "TransferPlan | PortedPlan", *,
+        compute_s: float = 0.0, overlap: bool = False,
+    ) -> float:
+        """Modeled tile time: transfers plus ``compute_s`` of tile compute.
+
+        Sequential phases (every executor except ``dataflow``) pay the sum
+        ``transfer + compute``.  With ``overlap=True`` (Fig. 13 DATAFLOW:
+        fetch/compute/commit run as pipelined stages) the transfer streams
+        behind the compute and only the pipeline fill — one burst's setup,
+        ``min(setup_s, transfer)`` — stays exposed:
+
+            time = fill + max(transfer - fill, compute_s)
+
+        which is ``<= transfer + compute_s`` (the sequential schedule),
+        ``>= max(transfer, compute_s)`` (neither engine can be beaten), and
+        exactly the transfer time when ``compute_s == 0``.
+        """
+        if compute_s < 0.0:
+            raise ValueError(f"compute_s must be >= 0, got {compute_s}")
+        t = self.transfer_time_s(plan)
+        if not overlap:
+            return t + compute_s
+        fill = min(self.setup_s, t)
+        return fill + max(t - fill, compute_s)
 
     def plan_bytes(self, plan: "TransferPlan | PortedPlan") -> float:
         """Wire bytes the whole plan moves (compression applied per burst)."""
@@ -219,11 +258,16 @@ class BandwidthReport:
     # modeled time's relative error against it; None when not measured
     measured_time_s: float | None = None
     model_error: float | None = None
+    # dataflow accounting: the compute term folded into the time and
+    # whether transfers were overlapped with it (Fig. 13 DATAFLOW)
+    compute_s: float = 0.0
+    overlap: bool = False
 
     @staticmethod
     def evaluate(
         plan: "TransferPlan | PortedPlan", model: BurstModel,
         measured_s: float | None = None,
+        *, compute_s: float = 0.0, overlap: bool = False,
     ) -> "BandwidthReport":
         """Bandwidth of a plan under ``model``.
 
@@ -238,9 +282,12 @@ class BandwidthReport:
 
         ``measured_s`` (a wall-clock measurement of the same schedule, see
         ``calibrate.measure_plan``) fills ``measured_time_s`` and the
-        modeled time's relative error ``model_error``.
+        modeled time's relative error ``model_error``.  ``compute_s`` /
+        ``overlap`` fold a per-tile compute term into the time the
+        bandwidths divide by (``overlap=True`` hides the transfer behind it
+        — the dataflow executor's schedule).
         """
-        t = model.time(plan)
+        t = model.time(plan, compute_s=compute_s, overlap=overlap)
         raw = model.plan_bytes(plan) / t if t else 0.0
         eff = plan.useful * model.elem_bytes / t if t else 0.0
         err = None
@@ -260,4 +307,30 @@ class BandwidthReport:
             footprint=getattr(plan, "footprint", None),
             measured_time_s=measured_s,
             model_error=err,
+            compute_s=compute_s,
+            overlap=overlap,
         )
+
+
+def overlap_speedup(
+    plan: "TransferPlan | PortedPlan", model: BurstModel, compute_s: float,
+) -> dict:
+    """Modeled gain of the dataflow schedule over sequential phases.
+
+    Returns ``t_sequential_s`` (``transfer + compute``), ``t_overlapped_s``
+    (Fig. 13 DATAFLOW pipelining, see :meth:`BurstModel.time`), their ratio
+    ``speedup``, and the ``bound`` — the best speedup any overlap could give
+    this plan, ``(T + C) / max(T, C)`` (2.0 at the balanced point).
+    """
+    t_seq = model.time(plan, compute_s=compute_s, overlap=False)
+    t_ovl = model.time(plan, compute_s=compute_s, overlap=True)
+    transfer = model.transfer_time_s(plan)
+    best = max(transfer, compute_s)
+    return {
+        "transfer_s": transfer,
+        "compute_s": compute_s,
+        "t_sequential_s": t_seq,
+        "t_overlapped_s": t_ovl,
+        "speedup": t_seq / t_ovl if t_ovl > 0.0 else 1.0,
+        "bound": t_seq / best if best > 0.0 else 1.0,
+    }

@@ -17,7 +17,12 @@ layer for the repo, on the backend we actually have (host/TPU via jax):
    compilation; the reported figure is the median of k timed passes.
    :func:`measure_plan` applies this to the exact schedules
    :class:`TransferPlan` / :class:`PortedPlan` emit (a ported plan's time
-   is the slowest port's schedule, matching ``BurstModel.time``).
+   is the slowest port's schedule, matching ``BurstModel.time``).  Both
+   take a ``compute_s`` term and an ``overlap=`` mode: sequential passes
+   block each copy then busy-spin the compute; overlapped passes dispatch
+   every copy asynchronously, spin the compute while the copies are in
+   flight, and block at the end — the measured counterpart of the Fig. 13
+   DATAFLOW schedule the ``dataflow`` executor runs.
 
 2. **Fit** — :func:`fit_burst_model` least-squares fits ``t = setup_s *
    n_bursts + wire_bytes / peak_bytes_per_s`` to the single-port samples
@@ -140,6 +145,25 @@ def _wire_buffer(n_words: int):
     return jnp.zeros((int(n_words),), jnp.float32)
 
 
+def _burn(seconds: float) -> None:
+    """Occupy ``seconds`` of wall-clock — the stand-in for tile compute.
+
+    Models a *dedicated* compute engine (Fig. 13 DATAFLOW: compute does not
+    contend with the DMA engine for resources): the bulk is slept, so the
+    host cores stay free for the in-flight copy threads, and only a short
+    tail is spun for timer precision.  A pure busy-spin would steal cores
+    from the copy engine — on a CPU-hosted jax "device" that *slows the
+    transfers down* and the overlapped schedule would (wrongly) measure
+    slower than the sequential one.  Either way the time cannot be elided
+    by the device queue."""
+    if seconds <= 0.0:
+        return
+    end = time.perf_counter() + seconds
+    while (remaining := end - time.perf_counter()) > 0.0:
+        if remaining > 5e-4:
+            time.sleep(remaining - 2e-4)
+
+
 def measure_runs(
     runs: Sequence[int],
     elem_bytes: int = 8,
@@ -147,6 +171,8 @@ def measure_runs(
     codec_bits: int | None = None,
     warmup: int | None = None,
     repeats: int | None = None,
+    compute_s: float = 0.0,
+    overlap: bool = False,
 ) -> float:
     """Measured wall-clock seconds to transfer one burst schedule.
 
@@ -157,21 +183,41 @@ def measure_runs(
     compilation happens there), then the median over ``repeats`` timed
     passes.  Defaults come from ``REPRO_MEASURE_WARMUP`` /
     ``REPRO_MEASURE_REPEATS`` when unset.  An empty schedule measures 0.
+
+    ``compute_s`` adds that much busy-spun host compute to every pass.
+    Sequentially (``overlap=False``) the copies are blocked on one by one
+    and the compute runs after them — wall-clock ≈ transfer + compute.
+    With ``overlap=True`` every copy is dispatched asynchronously first,
+    the compute spins while they are in flight, and the pass blocks at the
+    end — wall-clock ≈ max(transfer, compute), the Fig. 13 DATAFLOW
+    schedule.
     """
     warmup, repeats = _measure_defaults(warmup, repeats)
+    if compute_s < 0.0:
+        raise ValueError(f"compute_s must be >= 0, got {compute_s}")
     runs = tuple(int(r) for r in runs)
     if any(r <= 0 for r in runs):
         raise ValueError(f"burst lengths must be positive: {runs}")
-    if not runs:
+    if not runs and compute_s == 0.0:
         return 0.0
     copy = _copy_op()
     bufs = [_wire_buffer(_wire_words(r, elem_bytes, codec_bits)) for r in runs]
 
-    def one_pass() -> float:
-        t0 = time.perf_counter()
-        for b in bufs:
-            copy(b).block_until_ready()
-        return time.perf_counter() - t0
+    if overlap:
+        def one_pass() -> float:
+            t0 = time.perf_counter()
+            futs = [copy(b) for b in bufs]  # async dispatch: copies in flight
+            _burn(compute_s)
+            for f in futs:
+                f.block_until_ready()
+            return time.perf_counter() - t0
+    else:
+        def one_pass() -> float:
+            t0 = time.perf_counter()
+            for b in bufs:
+                copy(b).block_until_ready()
+            _burn(compute_s)
+            return time.perf_counter() - t0
 
     for _ in range(warmup):
         one_pass()
@@ -184,6 +230,8 @@ def measure_plan(
     *,
     warmup: int | None = None,
     repeats: int | None = None,
+    compute_s: float = 0.0,
+    overlap: bool = False,
 ) -> float:
     """Measured wall-clock seconds for a whole plan under ``model``'s
     element width — the measured counterpart of :meth:`BurstModel.time`.
@@ -191,10 +239,14 @@ def measure_plan(
     A :class:`TransferPlan` times its reads and writes as one schedule; a
     :class:`PortedPlan` times each port's schedule separately and reports
     the slowest (ports run concurrently, so the tile waits for the max —
-    the same §VII semantics the analytic model uses).
+    the same §VII semantics the analytic model uses).  ``compute_s`` /
+    ``overlap`` time the tile's compute alongside the schedule (each
+    port's schedule overlaps the same compute term; the tile still waits
+    for the slowest port) — see :func:`measure_runs`.
     """
     cb = getattr(plan, "codec_bits", None)
-    kw = dict(codec_bits=cb, warmup=warmup, repeats=repeats)
+    kw = dict(codec_bits=cb, warmup=warmup, repeats=repeats,
+              compute_s=compute_s, overlap=overlap)
     if isinstance(plan, PortedPlan):
         return max(
             measure_runs(rr + wr, model.elem_bytes, **kw)
@@ -356,8 +408,11 @@ class CalibratedModel(BurstModel):
         nearest = min(table, key=lambda p: (abs(p - n_ports), p))
         return table[nearest]
 
-    def time(self, plan: "TransferPlan | PortedPlan") -> float:
-        t = super().time(plan)
+    def transfer_time_s(self, plan: "TransferPlan | PortedPlan") -> float:
+        # the port factor scales the *transfer*; overriding here (not
+        # ``time``) lets the inherited compute/overlap composition apply
+        # unchanged to calibrated models
+        t = super().transfer_time_s(plan)
         return t * self.port_factor(getattr(plan, "n_ports", 1))
 
 
@@ -446,6 +501,7 @@ def calibrate(
     warmup: int | None = None,
     repeats: int | None = None,
     name: str | None = None,
+    overlap: bool = False,
 ) -> "Calibration":
     """Measure, fit, and verify ``model`` against this host.
 
@@ -462,6 +518,13 @@ def calibrate(
     :attr:`Calibration.plan_errors`, recording modeled-vs-measured and
     fitted-vs-measured relative error — the accountability artifact the
     calibration bench publishes per program.
+
+    ``overlap=True`` additionally measures each plan's *overlapped*
+    schedule at the balanced point (``compute_s`` equal to the modeled
+    transfer time — where Fig. 13 DATAFLOW pipelining pays the most) and
+    records a second plan-error row for it (``overlap: true``), verifying
+    the overlapped model against the wall clock.  Overlapped points never
+    feed the fit (the fit is transfer-only).
     """
     kw = dict(warmup=warmup, repeats=repeats)
     samples: list[TransferSample] = []
@@ -499,20 +562,30 @@ def calibrate(
                     label=f"{prog_name}/{storage}/p{p}",
                 )
                 samples.append(sample)
-                plan_points.append((prog_name, storage, p, target_plan, t))
+                plan_points.append((prog_name, storage, p, target_plan,
+                                    t, False, 0.0))
+                if overlap:
+                    # balanced point: compute exactly hides the transfer
+                    c = model.transfer_time_s(target_plan)
+                    t_ovl = measure_plan(target_plan, model,
+                                         compute_s=c, overlap=True, **kw)
+                    plan_points.append((prog_name, storage, p, target_plan,
+                                        t_ovl, True, c))
 
     fitted = fit_burst_model(samples, model, name=name)
 
     rows = []
-    for prog_name, storage, p, target_plan, t in plan_points:
-        modeled = model.time(target_plan)
-        predicted = fitted.time(target_plan)
+    for prog_name, storage, p, target_plan, t, ovl, c in plan_points:
+        modeled = model.time(target_plan, compute_s=c, overlap=ovl)
+        predicted = fitted.time(target_plan, compute_s=c, overlap=ovl)
         rows.append({
             "program": prog_name,
             "storage": storage,
             "n_ports": int(p),
             "codec_bits": getattr(target_plan, "codec_bits", None),
             "n_bursts": int(target_plan.n_bursts),
+            "overlap": bool(ovl),
+            "compute_s": float(c),
             "modeled_s": float(modeled),
             "fitted_s": float(predicted),
             "measured_s": float(t),

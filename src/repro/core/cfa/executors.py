@@ -21,6 +21,9 @@ the facet-storage dict, bit-exact across backends):
   layout family; declared 3-D only — the paper's kernel configuration.
 * ``sharded``   — port-mesh wavefront: facet arrays resident on their
   assigned port's device, waves executed via ``shard_map`` (§VII).
+* ``dataflow``  — software-pipelined wavefront: fetch, compute and commit of
+  consecutive tiles overlap (Fig. 13 DATAFLOW made a schedule; the modeled
+  counterpart is ``BurstModel.time(..., overlap=True)``).
 
 Custom backends register through :func:`register_executor`; the autotuner's
 cache key folds :func:`capability_fingerprint` in, so decisions re-search
@@ -71,12 +74,16 @@ class ExecutorCaps:
     (``repro.core.cfa.irredundant.STORAGE_MODES``); a kernel backend whose
     read engine has no decompression stage must not silently accept
     ``storage="compressed"``.
+    ``overlap`` — whether the backend overlaps fetch/compute/commit
+    (Fig. 13 DATAFLOW); sequential backends should be modeled with
+    ``BurstModel.time(..., overlap=False)``.
     """
 
     ndims: tuple[int, ...] | None = None
     multiport: bool = False
     kernels: bool = False
     storages: tuple[str, ...] = ("redundant", "irredundant", "compressed")
+    overlap: bool = False
     description: str = ""
 
 
@@ -175,6 +182,26 @@ def _sharded(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1, **opts):
                                              **opts)
 
 
+def _dataflow(pipeline: CFAPipeline, inputs, *, dtype, n_ports=1,
+              use_kernel: bool = False, interpret: bool = True):
+    # the kernel path inherits the pallas backend's envelope: the
+    # facet_fetch/stencil kernel family is 3-D and has no decode stage
+    if use_kernel and pipeline.space.ndim != 3:
+        raise BackendError(
+            "backend 'dataflow' drives the Pallas tile executor only for "
+            f"3-D spaces (use_kernel=True), got a {pipeline.space.ndim}-D "
+            "space; drop use_kernel for the host path"
+        )
+    if use_kernel and pipeline.storage == "compressed":
+        raise BackendError(
+            "backend 'dataflow' cannot drive the Pallas tile executor over "
+            "compressed facet storage (no in-kernel decode stage); drop "
+            "use_kernel for the host path"
+        )
+    return pipeline._sweep_dataflow(inputs, dtype, use_kernel=use_kernel,
+                                    interpret=interpret)
+
+
 # --------------------------------------------------------------------------
 # Registry
 # --------------------------------------------------------------------------
@@ -236,6 +263,15 @@ register_executor(_FnExecutor(
     _sharded,
     opts_allowed=("mesh", "axis", "assignment", "use_kernel"),
 ))
+register_executor(_FnExecutor(
+    "dataflow",
+    ExecutorCaps(kernels=True, overlap=True,
+                 description="software-pipelined wavefront: fetch/compute/"
+                             "commit of consecutive tiles overlap "
+                             "(Fig. 13 DATAFLOW)"),
+    _dataflow,
+    opts_allowed=("use_kernel", "interpret"),
+))
 
 
 # --------------------------------------------------------------------------
@@ -281,9 +317,11 @@ def check_backend(
     alternatives spelled out."""
     reason = _ineligible_reason(executor, program, space, n_ports, storage)
     if reason is not None:
+        # sorted: the error message must be stable regardless of
+        # registration order (matches get_executor's unknown-name error)
         raise BackendError(
             f"{reason}; eligible backends: "
-            f"{available_backends(program, space, n_ports, storage)}"
+            f"{sorted(available_backends(program, space, n_ports, storage))}"
         )
 
 
@@ -302,17 +340,22 @@ def available_backends(
 def select_backend(
     program: StencilProgram, space: IterSpace, n_ports: int = 1,
     storage: str = "redundant",
+    overlap: bool = False,
 ) -> str:
     """The ``backend="auto"`` rule, in one place:
 
     1. ``n_ports > 1``  →  ``sharded``   (the only multiport backend);
-    2. 3-D spaces       →  ``pallas``    (the paper's kernel configuration)
+    2. ``overlap=True`` →  ``dataflow``  (the only backend that pipelines
+       fetch/compute/commit, Fig. 13 DATAFLOW);
+    3. 3-D spaces       →  ``pallas``    (the paper's kernel configuration)
        — unless the requested storage discipline is outside the kernel
        backend's declared envelope (compressed), in which case
-    3. anything else    →  ``wavefront`` (dimension-generic, batched).
+    4. anything else    →  ``wavefront`` (dimension-generic, batched).
     """
     if n_ports > 1:
         return "sharded"
+    if overlap:
+        return "dataflow"
     if (space.ndim == 3
             and storage in EXECUTORS["pallas"].caps.storages):
         return "pallas"
@@ -357,6 +400,7 @@ def capability_fingerprint() -> list[list]:
     """
     return [
         [name, list(ex.caps.ndims) if ex.caps.ndims is not None else None,
-         ex.caps.multiport, ex.caps.kernels, list(ex.caps.storages)]
+         ex.caps.multiport, ex.caps.kernels, list(ex.caps.storages),
+         ex.caps.overlap]
         for name, ex in sorted(EXECUTORS.items())
     ]

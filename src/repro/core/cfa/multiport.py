@@ -250,6 +250,8 @@ def best_repartition(
     strategies: Sequence[str] = PORT_STRATEGIES,
     *,
     time_fn=None,
+    compute_s: float = 0.0,
+    overlap: bool = False,
 ) -> PortedPlan:
     """The fastest repartition of ``plan`` over up to ``n_ports`` ports.
 
@@ -266,8 +268,16 @@ def best_repartition(
     (default ``model.time``) — e.g. ``calibrate.measure_plan`` to pick the
     repartition by measured wall-clock instead of the analytic model.  The
     ``model`` still weights the LPT bin-packing inside each strategy.
+    ``compute_s`` / ``overlap`` are folded into the default score
+    (``model.time(pp, compute_s=..., overlap=...)``) so a dataflow
+    repartition is picked by its *overlapped* tile time; they are ignored
+    when ``time_fn`` is given.
     """
-    score = time_fn if time_fn is not None else model.time
+    if time_fn is not None:
+        score = time_fn
+    else:
+        def score(pp):
+            return model.time(pp, compute_s=compute_s, overlap=overlap)
     best: PortedPlan | None = None
     best_key: tuple | None = None
     for p in range(1, n_ports + 1):

@@ -29,6 +29,7 @@ import dataclasses
 import itertools
 import math
 import typing
+import warnings
 from typing import Mapping
 
 import numpy as np
@@ -410,6 +411,69 @@ class CFAPipeline:
                 outs = [self.execute_tile(halos[i]) for i in range(len(wave))]
             for tile, H in zip(wave, outs):
                 facets = self.copy_out(facets, tile, H)
+        return facets
+
+    # -- dataflow (overlapped) sweep ----------------------------------------
+
+    def _sweep_dataflow(self, inputs: jnp.ndarray, dtype=jnp.float32,
+                        use_kernel: bool = False,
+                        interpret: bool = True) -> dict[int, jnp.ndarray]:
+        """Software-pipelined wavefront sweep: fetch, compute and commit of
+        consecutive tiles overlap (the host realisation of Fig. 13 DATAFLOW).
+
+        Same plane arithmetic and same facet-commit order as
+        ``_sweep_wavefront`` — only the *interleaving* changes: while tile
+        ``j``'s execute is in flight (jax dispatches it asynchronously),
+        tile ``j+1``'s halo is gathered and tile ``j-1``'s result is
+        committed.  This is legal because every halo point a wave-``s``
+        tile reads was committed by a strictly earlier wave (backward deps
+        decrease the coordinate sum — see :meth:`wavefronts`), so a fetch
+        never races a same-wave commit.
+
+        The host path hands each gathered halo to a donated jitted staging
+        buffer (``jax.jit(..., donate_argnums=0)``): the previous tile's
+        halo memory is reused for the next tile — a ping-pong staging pair
+        instead of a fresh allocation per tile — while the plane recurrence
+        itself runs through the very same eager ``execute_tile`` the sweep
+        executor uses, keeping the host path bit-exact.  The kernel path
+        runs each tile through the Pallas executor (``execute_tiles``),
+        whose grid pipeline double-buffers HBM<->VMEM copies against
+        compute in hardware.
+        """
+        facets = self.init_facets(dtype)
+        facets = self.load_inputs(facets, inputs.astype(dtype))
+        interior = self._interior_slices(self.widths)
+        if use_kernel:
+            from repro.kernels.stencil import execute_tiles
+
+            def _dispatch(H):
+                out = execute_tiles(self.program.name, H[None],
+                                    self.tiling.sizes, interpret=interpret)
+                return H.at[interior].set(out[0])
+        else:
+            stage = jax.jit(lambda h: h, donate_argnums=0)
+
+            def _dispatch(H):
+                with warnings.catch_warnings():
+                    # backends without donation support (CPU jax) warn and
+                    # fall back to a copy; the staging is then a no-op,
+                    # not an error
+                    warnings.filterwarnings("ignore", message=r".*[Dd]onat")
+                    H = stage(H)
+                return self.execute_tile(H)
+
+        for wave in self.wavefronts():
+            nxt = self.copy_in(facets, wave[0])
+            prev_tile: tuple[int, ...] | None = None
+            prev_out = None
+            for j, tile in enumerate(wave):
+                H = _dispatch(nxt)  # async: compute in flight from here on
+                if j + 1 < len(wave):
+                    nxt = self.copy_in(facets, wave[j + 1])  # prefetch
+                if prev_tile is not None:
+                    facets = self.copy_out(facets, prev_tile, prev_out)
+                prev_tile, prev_out = tile, H
+            facets = self.copy_out(facets, prev_tile, prev_out)
         return facets
 
     # -- multi-port sharded sweep -------------------------------------------

@@ -107,11 +107,24 @@ def test_auto_backend_selection_rules():
     assert cfa.select_backend(h1, IterSpace((8, 8))) == "wavefront"
     assert cfa.select_backend(h3, IterSpace((4, 4, 4, 4))) == "wavefront"
     assert cfa.select_backend(j, IterSpace((8, 8, 8)), n_ports=2) == "sharded"
+    # overlap=True routes to the dataflow backend (any dimensionality);
+    # the multiport rule still wins (dataflow is single-port)
+    assert cfa.select_backend(j, IterSpace((8, 8, 8)), overlap=True) == "dataflow"
+    assert cfa.select_backend(h3, IterSpace((4, 4, 4, 4)),
+                              overlap=True) == "dataflow"
+    assert cfa.select_backend(j, IterSpace((8, 8, 8)), n_ports=2,
+                              overlap=True) == "sharded"
     # compile(backend="auto") applies exactly these rules
     assert cfa.compile(j, (8, 8, 8), layout=(4, 4, 4)).backend == "pallas"
     assert cfa.compile(h1, (8, 8), layout=(4, 4)).backend == "wavefront"
     assert cfa.compile(j, (8, 8, 8), layout=(4, 4, 4),
                        n_ports=2).backend == "sharded"
+    assert cfa.compile(j, (8, 8, 8), layout=(4, 4, 4),
+                       overlap=True).backend == "dataflow"
+    # overlap=True with an explicitly sequential backend is rejected loudly
+    with pytest.raises(cfa.BackendError, match="sequentially"):
+        cfa.compile(j, (8, 8, 8), layout=(4, 4, 4), backend="sweep",
+                    overlap=True)
 
 
 def test_pallas_backend_is_3d_only():
@@ -123,7 +136,7 @@ def test_pallas_backend_is_3d_only():
 
 
 def test_single_port_backends_reject_multiport():
-    for backend in ("reference", "sweep", "wavefront", "pallas"):
+    for backend in ("reference", "sweep", "wavefront", "pallas", "dataflow"):
         with pytest.raises(cfa.BackendError, match="single-port"):
             cfa.compile("jacobi2d5p", (8, 8, 8), layout=(4, 4, 4),
                         backend=backend, n_ports=2)
@@ -135,11 +148,26 @@ def test_unknown_backend_lists_registered():
                     backend="turbo")
 
 
+def test_capability_gate_error_lists_backends_sorted():
+    """check_backend's BackendError spells the eligible alternatives out in
+    sorted order — stable regardless of executor registration order (the
+    same convention get_executor's unknown-name error already follows)."""
+    with pytest.raises(cfa.BackendError) as ei:
+        cfa.compile("jacobi2d5p", (8, 8, 8), layout=(4, 4, 4),
+                    backend="pallas", n_ports=2)
+    msg = str(ei.value)
+    eligible = cfa.available_backends(
+        get_program("jacobi2d5p"), IterSpace((8, 8, 8)), n_ports=2)
+    assert f"eligible backends: {sorted(eligible)}" in msg
+
+
 def test_available_backends():
     j, h3 = get_program("jacobi2d5p"), get_program("heat3d")
     assert cfa.available_backends(j, IterSpace((8, 8, 8))) == [
-        "reference", "sweep", "wavefront", "pallas", "sharded"]
-    assert "pallas" not in cfa.available_backends(h3, IterSpace((4, 4, 4, 4)))
+        "reference", "sweep", "wavefront", "pallas", "sharded", "dataflow"]
+    h3_avail = cfa.available_backends(h3, IterSpace((4, 4, 4, 4)))
+    assert "pallas" not in h3_avail
+    assert "dataflow" in h3_avail  # the host dataflow path is N-D
     assert cfa.available_backends(j, IterSpace((8, 8, 8)), n_ports=2) == [
         "sharded"]
 
@@ -405,6 +433,7 @@ PUBLIC_API = [
     "get_target",
     "measure_plan",
     "measure_runs",
+    "overlap_speedup",
     "register_executor",
     "register_target",
     "rehydrate_facets",
@@ -421,4 +450,6 @@ def test_public_api_snapshot():
 
 def test_builtin_backends_registered():
     assert list(EXECUTORS) == ["reference", "sweep", "wavefront", "pallas",
-                               "sharded"]
+                               "sharded", "dataflow"]
+    # only the dataflow backend declares the Fig. 13 phase overlap
+    assert [n for n, ex in EXECUTORS.items() if ex.caps.overlap] == ["dataflow"]

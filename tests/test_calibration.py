@@ -492,6 +492,129 @@ def test_calibration_save(tmp_path, measured_timer):
     assert blob["plan_errors"][0]["rel_err_modeled"] is not None
 
 
+# ---------------------------------------------------------------------------
+# measured: the overlapped (dataflow) schedule vs the sequential one
+# ---------------------------------------------------------------------------
+
+def test_measure_runs_rejects_negative_compute():
+    with pytest.raises(ValueError, match="compute_s"):
+        measure_runs((4,), 8, compute_s=-1e-3, **MEASURE_KW)
+
+
+def test_measure_runs_compute_only_pass_takes_the_compute_time():
+    # an empty schedule with compute still occupies the compute's wall time
+    # (the _burn contract: elapsed >= seconds, by construction)
+    for ovl in (False, True):
+        t = measure_runs((), 8, warmup=0, repeats=1, compute_s=5e-4,
+                         overlap=ovl)
+        assert t >= 5e-4
+
+
+def test_measured_overlap_hides_compute_behind_transfers(measured_timer):
+    """The dataflow schedule measured for real: at the balanced point
+    (compute ~ transfer) the overlapped pass must undercut the sequential
+    one beyond the host's noise band — the wall-clock proof that fetch and
+    compute genuinely overlap.  Large bursts keep the schedule copy-bound
+    rather than dispatch-bound (python dispatch cannot overlap python
+    compute on a single host thread)."""
+    runs = (1 << 22,) * 4
+    kw = dict(repeats=5)
+    t0 = measured_timer.measure_runs(runs, **kw)
+    c = t0  # balanced point: the modeled separation is maximal (~2x)
+    t_seq = measured_timer.measure_runs(runs, compute_s=c, overlap=False, **kw)
+    t_ovl = measured_timer.measure_runs(runs, compute_s=c, overlap=True, **kw)
+    tol = measured_timer.tolerance
+    # overlapping never hurts ...
+    assert t_ovl <= t_seq * (1.0 + tol)
+    # ... here it must genuinely help.  The modeled balanced-point speedup
+    # is 2x; demand a healthy fraction of it.  The noise-derived tolerance
+    # is capped: on a loud host it can exceed 1.0, which would make any
+    # separation demand unsatisfiable even for a perfect pipeline.
+    sep = min(max(tol, 0.2), 0.45)
+    assert t_seq - t_ovl > sep * t_seq, (
+        f"no measured overlap: seq={t_seq:.3e} ovl={t_ovl:.3e} (sep={sep})"
+    )
+    # ... and the overlapped pass cannot beat its critical path
+    assert t_ovl > (1.0 - min(tol, 0.9)) * max(t0, c)
+
+
+def test_fitted_overlapped_model_ranks_regimes_like_measurement(measured_timer):
+    """ISSUE-7: a model fitted from measured samples must rank a
+    transfer-heavy plan against a compute-heavy one the same way the wall
+    clock does, under the overlapped composition — on pairs the host can
+    distinguish (the same tolerance-pair rule as the sequential ranking
+    tests above)."""
+    kw = dict(repeats=3)
+    grid = [(4096,), (1 << 20,), (1 << 22,), (1 << 22,) * 2]
+    samples = [
+        TransferSample(runs_by_port=(s,), elem_bytes=AXI_ZC706.elem_bytes,
+                       measured_s=measured_timer.measure_runs(s, **kw),
+                       label=f"grid/{sum(s)}")
+        for s in grid
+    ]
+    fit = fit_burst_model(samples, AXI_ZC706)
+    from repro.core.cfa.plans import TransferPlan
+
+    plan_heavy = TransferPlan("x", (1 << 22,) * 4, (), 4 * (1 << 22), 0)
+    plan_lean = TransferPlan("x", (1 << 20,), (), 1 << 20, 0)
+    c_big = 2.0 * fit.transfer_time_s(plan_heavy)
+    # (plan, per-tile compute): transfer-heavy, lean, compute-heavy
+    configs = [(plan_heavy, 0.0), (plan_lean, 0.0), (plan_lean, c_big)]
+    modeled = [fit.time(p, compute_s=c, overlap=True) for p, c in configs]
+    measured = [measured_timer.measure_plan(p, AXI_ZC706, compute_s=c,
+                                            overlap=True, **kw)
+                for p, c in configs]
+    tol = measured_timer.tolerance
+    checked = 0
+    for i in range(len(configs)):
+        for j in range(i + 1, len(configs)):
+            lo, hi = sorted((measured[i], measured[j]))
+            if hi - lo <= tol * hi:
+                continue  # tie on this host: no rank information
+            checked += 1
+            assert (modeled[i] < modeled[j]) == (measured[i] < measured[j]), (
+                f"overlapped fit ranks configs {i},{j} "
+                f"({modeled[i]:.2e} vs {modeled[j]:.2e}) against the "
+                f"measurement ({measured[i]:.2e} vs {measured[j]:.2e})"
+            )
+    # the heavy-vs-lean pair differs ~4x in bytes and the compute-heavy
+    # config doubles the lean one: at least one pair must be decidable
+    assert checked >= 1
+
+
+def test_calibrate_overlap_records_overlapped_plan_rows(measured_timer):
+    c = calibrate(AXI_ZC706, programs=("jacobi2d5p",),
+                  storages=("redundant",), ports=(1,),
+                  lengths=(1, 64), counts=(1, 4),
+                  warmup=measured_timer.warmup,
+                  repeats=measured_timer.repeats,
+                  overlap=True)
+    seq = [r for r in c.plan_errors if not r["overlap"]]
+    ovl = [r for r in c.plan_errors if r["overlap"]]
+    # one sequential + one overlapped row per (program, storage, ports)
+    assert len(seq) == 1 and len(ovl) == 1
+    assert seq[0]["compute_s"] == 0.0
+    assert ovl[0]["compute_s"] > 0.0  # the balanced point: compute ~ transfer
+    for row in c.plan_errors:
+        assert row["measured_s"] > 0.0
+        assert row["rel_err_modeled"] >= 0.0
+        assert row["rel_err_fitted"] >= 0.0
+    # the overlapped rows survive the JSON round-trip
+    back = Calibration.from_json(c.to_json())
+    assert back == c
+    assert [r["overlap"] for r in back.plan_errors] == [False, True]
+
+
+def test_calibrate_rows_carry_overlap_keys_by_default(measured_timer):
+    c = calibrate(AXI_ZC706, programs=("jacobi2d5p",),
+                  storages=("redundant",), ports=(1,),
+                  lengths=(1, 64), counts=(1,),
+                  warmup=measured_timer.warmup,
+                  repeats=measured_timer.repeats)
+    assert all(r["overlap"] is False and r["compute_s"] == 0.0
+               for r in c.plan_errors)
+
+
 def test_timing_probe_env_escape_hatch(monkeypatch):
     from repro.core.cfa.calibrate import (_timing_probe, measurement_noise,
                                           timing_unusable_reason)

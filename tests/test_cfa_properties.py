@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.cfa import (
     AXI_ZC706,
+    TPU_V5E_HBM,
     BandwidthReport,
     Deps,
     IterSpace,
@@ -20,6 +21,7 @@ from repro.core.cfa import (
     cfa_plan,
     facet_widths,
     flow_in_points,
+    overlap_speedup,
 )
 from repro.core.cfa.plans import TransferPlan, _assign_hosts
 
@@ -395,6 +397,64 @@ def test_calibrated_model_port_factor_properties(factors, query):
         assert got == table[best]
         lo, hi = min(table.values()), max(table.values())
         assert lo <= got <= hi
+
+
+# ---------------------------------------------------------------------------
+# Overlap model (Fig. 13 DATAFLOW): bounds on the pipelined tile time
+# ---------------------------------------------------------------------------
+
+compute_seconds = st.floats(0.0, 1e-2, allow_nan=False, allow_infinity=False)
+
+
+@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64),
+       c=compute_seconds)
+@settings(max_examples=60, deadline=None)
+def test_overlap_time_bounded_by_sequential_and_critical_path(runs, c):
+    """The pipelined tile time can never beat its critical path
+    (max of transfer and compute) nor lose to running the phases back to
+    back (transfer + compute); zero compute degenerates to the plain
+    transfer time."""
+    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        t = model.transfer_time_s(plan)
+        seq = model.time(plan, compute_s=c, overlap=False)
+        ovl = model.time(plan, compute_s=c, overlap=True)
+        assert seq == pytest.approx(t + c)
+        assert ovl <= seq + 1e-18
+        assert ovl >= max(t, c) - 1e-18
+        # no compute to hide: overlapping buys exactly nothing
+        assert model.time(plan, overlap=True) == pytest.approx(t)
+
+
+@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64),
+       c1=compute_seconds, c2=compute_seconds)
+@settings(max_examples=60, deadline=None)
+def test_overlap_time_monotone_in_compute(runs, c1, c2):
+    """More per-tile compute never makes the overlapped schedule faster."""
+    lo, hi = sorted((c1, c2))
+    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        assert (model.time(plan, compute_s=hi, overlap=True)
+                >= model.time(plan, compute_s=lo, overlap=True) - 1e-18)
+        assert (model.time(plan, compute_s=hi, overlap=False)
+                >= model.time(plan, compute_s=lo, overlap=False) - 1e-18)
+
+
+@given(runs=st.lists(st.integers(1, 4096), min_size=1, max_size=64),
+       c=compute_seconds)
+@settings(max_examples=60, deadline=None)
+def test_overlap_speedup_between_one_and_bound(runs, c):
+    """The modeled overlapped-vs-sequential gain is >= 1 (overlap never
+    hurts) and <= the perfect-pipelining bound (t_seq / critical path)."""
+    plan = TransferPlan("x", tuple(runs), (), sum(runs), 0)
+    for model in (AXI_ZC706, TPU_V5E_HBM):
+        s = overlap_speedup(plan, model, compute_s=c)
+        assert s["t_sequential_s"] == pytest.approx(
+            s["transfer_s"] + s["compute_s"])
+        assert s["speedup"] >= 1.0 - 1e-12
+        assert s["speedup"] <= s["bound"] + 1e-12
+        assert s["bound"] == pytest.approx(
+            s["t_sequential_s"] / max(s["transfer_s"], s["compute_s"]))
 
 
 @given(
