@@ -78,6 +78,17 @@ from repro.core.cfa import (
     get_codec,
     # the underlying pipeline (CompiledStencil.pipeline)
     CFAPipeline,
+    # the staged lowering behind compile (CompiledStencil.trace(),
+    # compile(passes=...), the autotune cache's pipeline fingerprint)
+    CompileState,
+    Pass,
+    PassPipeline,
+    PassTrace,
+    PipelineError,
+    DEFAULT_PASSES,
+    default_pipeline,
+    default_pass_fingerprint,
+    estimate_facet_bytes,
 )
 
 __all__ = [
@@ -130,4 +141,13 @@ __all__ = [
     "CODECS",
     "get_codec",
     "CFAPipeline",
+    "CompileState",
+    "Pass",
+    "PassPipeline",
+    "PassTrace",
+    "PipelineError",
+    "DEFAULT_PASSES",
+    "default_pipeline",
+    "default_pass_fingerprint",
+    "estimate_facet_bytes",
 ]

@@ -81,8 +81,8 @@ Benchmarks (``programs``)
     * ``PROGRAMS`` / ``get_program`` — the Table I suite registry.
 
 Pipeline (``transform``)
-    * ``CFAPipeline`` — the read->execute->write tile pipeline of §V (Fig. 13);
-      ``CFAPipeline.from_autotuned`` builds it from an autotuned layout.
+    * ``CFAPipeline`` — the read->execute->write tile pipeline of §V
+      (Fig. 13); built by the ``lower_backend`` pass, run by the executors.
 
 Autotuner (``autotune``) — the §VI "which layout?" question made a subsystem
     * ``autotune``         — staged search over tilings x extension dirs x
@@ -110,20 +110,35 @@ Calibration (``calibrate``) — the measured-vs-modeled verification layer
     * ``measurement_noise`` / ``timing_unusable_reason`` — the host noise
       probe behind the timing tests' skip-with-reason fixture.
 
+Lowering passes (``passes``) — ``compile`` as a staged compiler flow
+    * ``CompileState``    — the immutable lowering artifact (request fields
+      refined in place, artifacts accreted per stage).
+    * ``Pass`` / ``PassPipeline`` / ``PipelineError`` — the stage protocol,
+      the validated runner (duplicate/missing/mis-ordered stages rejected at
+      assembly), and its loud failure mode.
+    * ``PassTrace``       — one stage's trace record (name, version, wall
+      time, artifact diff); ``CompiledStencil.trace()`` returns the run's
+      tuple of them.
+    * ``default_pipeline`` / ``DEFAULT_PASSES`` /
+      ``default_pass_fingerprint`` — the pinned default lowering
+      (resolve_program -> validate_target -> distribute -> layout_search ->
+      storage_map -> port_repartition -> select_backend -> lower_backend)
+      and its (name, version) fingerprint, the identity the autotune cache
+      is keyed by (schema v7).
+    * ``estimate_facet_bytes`` — the distribute pass's per-host budget
+      metric (``compile(host_budget=...)`` splits over the port mesh when
+      the estimate exceeds it).
+
 Front-end (``api``/``executors``) — one declarative entry point over it all
-    * ``compile``          — layout search + planning + backend selection in
-      one call; returns a ``CompiledStencil`` (callable; carries ``.layout``,
-      ``.plan``, ``.report()``, ``.lower()``, ``.pipeline``).
+    * ``compile``          — a thin driver over the default pass pipeline;
+      returns a ``CompiledStencil`` (callable; carries ``.layout``,
+      ``.plan``, ``.report()``, ``.lower()``, ``.pipeline``, ``.trace()``).
     * ``Target`` / ``TARGETS`` / ``register_target`` / ``get_target`` — the
       platform registry (burst model + port budget).
     * ``Executor`` / ``ExecutorCaps`` / ``EXECUTORS`` / ``register_executor``
       / ``get_executor`` / ``available_backends`` / ``select_backend`` /
       ``BackendError`` — the execution-backend registry and its single
       capability gate (N-D and port-count validation).
-
-The legacy composite entry points (``CFAPipeline.from_autotuned``, the
-``sweep*`` drivers, the kernel ``*_from_autotuned`` wrappers) remain as thin
-shims that emit ``DeprecationWarning`` and delegate.
 """
 from .spaces import (
     IterSpace,
@@ -203,6 +218,17 @@ from .calibrate import (
     timing_unusable_reason,
 )
 from .transform import CFAPipeline
+from .passes import (
+    CompileState,
+    Pass,
+    PassPipeline,
+    PassTrace,
+    PipelineError,
+    DEFAULT_PASSES,
+    default_pipeline,
+    default_pass_fingerprint,
+    estimate_facet_bytes,
+)
 from .executors import (
     BackendError,
     Executor,
@@ -244,6 +270,9 @@ __all__ = [
     "measure_runs", "measure_plan", "fit_burst_model", "calibrate",
     "measurement_noise", "timing_unusable_reason",
     "CFAPipeline",
+    "CompileState", "Pass", "PassPipeline", "PassTrace", "PipelineError",
+    "DEFAULT_PASSES", "default_pipeline", "default_pass_fingerprint",
+    "estimate_facet_bytes",
     "BackendError", "Executor", "ExecutorCaps", "EXECUTORS",
     "register_executor", "get_executor", "available_backends", "select_backend",
     "Target", "TARGETS", "register_target", "get_target",

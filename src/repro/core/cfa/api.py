@@ -7,15 +7,20 @@ doing it by hand means wiring four subsystems (``get_program`` →
 duplicated at every step.  This module collapses that into
 
     compiled = cfa.compile("jacobi2d5p", (16, 32, 32))
-    facets   = compiled(inputs)            # same payload as CFAPipeline.sweep
+    facets   = compiled(inputs)            # the facet-storage payload
     compiled.report()                      # BurstModel bandwidth stats
+    compiled.trace()                       # the per-pass lowering trace
     compiled.lower(backend="sharded")      # rebind to another backend
 
-``compile`` resolves the layout (autotune by default), validates the
-backend against its declared capabilities and the target's port budget
-(:mod:`repro.core.cfa.executors`), and returns a :class:`CompiledStencil` —
-a callable carrying the layout, the interior-tile transfer plan, the
-bandwidth report and the underlying :class:`CFAPipeline`.
+``compile`` is a thin driver over the staged lowering of
+:mod:`repro.core.cfa.passes`: it seeds a :class:`~repro.core.cfa.passes.
+CompileState` from its arguments, runs the default :class:`~repro.core.
+cfa.passes.PassPipeline` (resolve_program → validate_target → distribute →
+layout_search → storage_map → port_repartition → select_backend →
+lower_backend), and returns the resulting :class:`CompiledStencil` — a
+callable carrying the layout, the interior-tile transfer plan, the
+bandwidth report, the underlying :class:`CFAPipeline` and the per-pass
+trace.
 
 The :class:`Target` registry unifies the paper's ZC706 AXI port model, the
 TPU HBM adaptation and custom :class:`BurstModel`\\ s — including each
@@ -30,26 +35,16 @@ from typing import Mapping, Sequence
 
 import jax.numpy as jnp
 
-from .autotune import LayoutCandidate, LayoutDecision, autotune
+from .autotune import LayoutCandidate, LayoutDecision
 from .bandwidth import AXI_ZC706, TPU_V5E_HBM, BandwidthReport, BurstModel
-from .compress import BlockCodec, get_codec
-from .irredundant import (
-    STORAGE_MODES,
-    CompressedPipeline,
-    IrredundantPipeline,
-    rehydrate_facets,
-)
+from .compress import BlockCodec
+from .irredundant import rehydrate_facets
 from .multiport import best_repartition
 from .plans import TransferPlan
-from .programs import StencilProgram, get_program
-from .spaces import IterSpace, Tiling
-from .executors import (
-    BackendError,
-    Executor,
-    check_backend,
-    get_executor,
-    select_backend,
-)
+from .programs import StencilProgram
+from .spaces import IterSpace
+from .executors import Executor, check_backend, get_executor
+from .passes import CompileState, PassPipeline, PassTrace, default_pipeline
 from .transform import CFAPipeline
 
 __all__ = [
@@ -143,7 +138,7 @@ class CompiledStencil:
 
     ``compiled(inputs)`` runs the tiled computation through facet storage on
     the bound backend and returns the facet dict — the exact payload of
-    ``CFAPipeline.sweep``, bit-identical across backends.  The layout, the
+    ``CFAPipeline._sweep``, bit-identical across backends.  The layout, the
     interior-tile :class:`TransferPlan`, the modeled bandwidth
     (:meth:`report`) and the underlying :class:`CFAPipeline` ride along.
     """
@@ -158,10 +153,20 @@ class CompiledStencil:
     decision: LayoutDecision | None = dataclasses.field(default=None, repr=False)
     storage: str = "redundant"
     codec: BlockCodec | None = None  # storage="compressed" only
+    # True when the distribute pass split the space over the port mesh
+    distributed: bool = False
+    # the per-pass lowering record (PassPipeline.run), attached by compile
+    lowering: tuple = dataclasses.field(default=(), repr=False, compare=False)
 
     @property
     def backend(self) -> str:
         return self.executor.name
+
+    def trace(self) -> "tuple[PassTrace, ...]":
+        """The per-pass lowering trace: each stage's name, version, wall
+        time and the state fields it changed (empty when this stencil was
+        built outside a :class:`~repro.core.cfa.passes.PassPipeline`)."""
+        return self.lowering
 
     @property
     def storage_map(self):
@@ -282,50 +287,6 @@ class CompiledStencil:
 # --------------------------------------------------------------------------
 
 
-def _resolve_layout(
-    layout,
-    program: StencilProgram,
-    space: IterSpace,
-    target: Target,
-    n_ports: int,
-    storage: str,
-    codec: "BlockCodec | None",
-    autotune_kwargs: Mapping | None,
-) -> tuple[LayoutCandidate, LayoutDecision | None]:
-    if isinstance(layout, str):
-        if layout == "autotune":
-            decision = autotune(program, space, target.model,
-                                n_ports=n_ports, storage=storage, codec=codec,
-                                **dict(autotune_kwargs or {}))
-            return decision.best_cfa().candidate, decision
-        if layout == "default":
-            return LayoutCandidate("cfa", program.default_tile,
-                                   contiguity="intra-tile"), None
-        raise ValueError(
-            f"layout must be 'autotune', 'default', a LayoutCandidate, a "
-            f"LayoutDecision or a tile tuple; got {layout!r}"
-        )
-    if isinstance(layout, LayoutCandidate):
-        if layout.scheme != "cfa":
-            raise ValueError(
-                f"only 'cfa'-scheme layouts are executable (facet storage); "
-                f"got scheme {layout.scheme!r} — the baseline schemes exist "
-                f"for plan/bandwidth comparison only"
-            )
-        return layout, None
-    if isinstance(layout, LayoutDecision):
-        if layout.program != program.name or tuple(layout.space) != space.sizes:
-            raise ValueError(
-                f"decision is for {layout.program!r} @ {tuple(layout.space)}, "
-                f"not {program.name!r} @ {space.sizes}"
-            )
-        return layout.best_cfa().candidate, layout
-    if isinstance(layout, Sequence):
-        return LayoutCandidate("cfa", tuple(int(t) for t in layout),
-                               contiguity="intra-tile"), None
-    raise TypeError(f"cannot interpret layout {layout!r}")
-
-
 def compile(
     program: StencilProgram | str,
     space: IterSpace | Sequence[int],
@@ -338,6 +299,9 @@ def compile(
     codec: "BlockCodec | str | None" = None,
     overlap: bool = False,
     autotune_kwargs: Mapping | None = None,
+    host_budget: int | None = None,
+    halo_quantize: bool = False,
+    passes: PassPipeline | None = None,
 ) -> CompiledStencil:
     """Compile ``program`` on ``space`` into an executable stencil.
 
@@ -372,57 +336,30 @@ def compile(
     * ``autotune_kwargs`` — passed through to :func:`autotune` when
       ``layout="autotune"`` (``seed``, ``budget``, ``footprint_weight``,
       ``cache_dir``, ...).
+    * ``host_budget`` — per-host facet-memory budget in bytes for the
+      ``distribute`` pass: a space whose estimated facet family exceeds it
+      is split over enough ports that each shard fits (``n_ports`` is
+      raised, backend auto-selection lowers to ``sharded``) instead of
+      raising.  ``None`` (default) never splits.
+    * ``halo_quantize`` — route every halo gather through the int8
+      compression hooks of ``repro.distributed.compression`` (lossy halo
+      traffic; off by default so results stay bit-exact).
+    * ``passes`` — a custom :class:`~repro.core.cfa.passes.PassPipeline`
+      to lower with instead of :func:`~repro.core.cfa.passes.
+      default_pipeline` (stage order is validated at pipeline assembly).
     """
-    prog = get_program(program) if isinstance(program, str) else program
-    sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
-    if prog.ndim != sp.ndim:
-        raise ValueError(
-            f"program {prog.name!r} is {prog.ndim}-D but the space "
-            f"{sp.sizes} is {sp.ndim}-D"
-        )
-    tgt = get_target(target)
-    if n_ports < 1:
-        raise ValueError(f"n_ports must be >= 1: {n_ports}")
-    if tgt.max_ports is not None and n_ports > tgt.max_ports:
-        raise ValueError(
-            f"target {tgt.name!r} has {tgt.max_ports} memory port(s); "
-            f"n_ports={n_ports} exceeds the platform budget"
-        )
-    if storage not in STORAGE_MODES:
-        raise ValueError(f"storage must be one of {STORAGE_MODES}: {storage!r}")
-    if codec is not None and storage != "compressed":
-        raise ValueError(
-            f'a codec only applies to storage="compressed", not {storage!r}'
-        )
-    cdc = get_codec(codec) if storage == "compressed" else None
-
-    name = (select_backend(prog, sp, n_ports, storage, overlap)
-            if backend == "auto" else backend)
-    ex = get_executor(name)
-    check_backend(ex, prog, sp, n_ports, storage)
-    if overlap and not ex.caps.overlap:
-        raise BackendError(
-            f"overlap=True needs a backend that pipelines fetch/compute/"
-            f"commit, but {name!r} runs its phases sequentially; use "
-            f'backend="dataflow" (or "auto")'
-        )
-
-    cand, decision = _resolve_layout(layout, prog, sp, tgt, n_ports,
-                                     storage, cdc, autotune_kwargs)
-    pipe_kwargs = dict(
-        ext_dirs=cand.ext_dirs,
-        contiguity=cand.contiguity or "intra-tile",
-        decision=decision,
+    state = CompileState(
+        program=program, space=space, target=target, n_ports=n_ports,
+        layout=layout, backend=backend, storage=storage, codec=codec,
+        overlap=overlap,
+        autotune_kwargs=dict(autotune_kwargs) if autotune_kwargs else None,
+        host_budget=host_budget, halo_quantize=halo_quantize,
     )
-    if storage == "redundant":
-        pipeline = CFAPipeline(prog, sp, Tiling(cand.tile), **pipe_kwargs)
-    elif storage == "irredundant":
-        pipeline = IrredundantPipeline(prog, sp, Tiling(cand.tile), **pipe_kwargs)
-    else:
-        pipeline = CompressedPipeline(prog, sp, Tiling(cand.tile),
-                                      codec=cdc, **pipe_kwargs)
-    return CompiledStencil(
-        program=prog, space=sp, target=tgt, n_ports=n_ports,
-        executor=ex, pipeline=pipeline, layout=cand, decision=decision,
-        storage=storage, codec=cdc,
-    )
+    pipe = default_pipeline() if passes is None else passes
+    final = pipe.run(state)
+    if final.compiled is None:
+        raise RuntimeError(
+            f"pipeline {pipe.names} completed without producing a "
+            f"CompiledStencil"
+        )
+    return dataclasses.replace(final.compiled, lowering=final.trace)

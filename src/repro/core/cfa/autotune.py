@@ -69,6 +69,12 @@ __all__ = [
     "clear_cache",
 ]
 
+# v7: the pass-pipeline fingerprint (repro.core.cfa.passes) — the ordered
+# (pass name, version) list of the lowering that ran the search is folded
+# into the cache key AND stored on the decision (``pass_pipeline``), and
+# the loader rejects a fingerprint mismatch loudly: a decision computed by
+# one lowering (e.g. before a pass was reordered, added or re-versioned)
+# must not silently drive another.
 # v6: the dataflow overlap axis (Fig. 13 DATAFLOW, ``backend="dataflow"``)
 # — decision-level ``overlap`` + ``compute_per_elem_s`` knobs, per-candidate
 # overlap/compute_s fields on ScoredLayout (time_s becomes the overlapped
@@ -90,7 +96,7 @@ __all__ = [
 # loudly (CacheSchemaError -> warning) instead of silently deserializing.
 # v2: n_ports search dimension + per-candidate port fields (ScoredLayout)
 # and the decision-level n_ports.
-_CACHE_VERSION = 6
+_CACHE_VERSION = 7
 
 # how a candidate's rank is scored: by the analytic BurstModel, or by
 # measured wall-clock of the top modeled candidates (calibrate.measure_plan)
@@ -318,6 +324,9 @@ class LayoutDecision:
     # much compute per tile element (seconds)
     overlap: bool = False
     compute_per_elem_s: float = 0.0
+    # pass-pipeline axis (schema v7): the ordered (name, version)
+    # fingerprint of the lowering pipeline this decision was searched for
+    pass_pipeline: tuple[tuple[str, str], ...] | None = None
     from_cache: bool = dataclasses.field(default=False, compare=False)
 
     @property
@@ -402,10 +411,11 @@ class LayoutDecision:
         if version != _CACHE_VERSION:
             raise CacheSchemaError(
                 f"autotune cache schema v{version}, need v{_CACHE_VERSION} "
-                f"(v6 adds the dataflow overlap axis — overlap flag + "
-                f"per-tile-element compute seconds — on top of the v5 "
-                f"scoring basis, the v4 storage discipline and the v3 "
-                f"target + backend capability set); delete the stale file "
+                f"(v7 adds the pass-pipeline fingerprint — the ordered "
+                f"name/version list of the lowering that ran the search — "
+                f"on top of the v6 dataflow overlap axis, the v5 scoring "
+                f"basis, the v4 storage discipline and the v3 target + "
+                f"backend capability set); delete the stale file "
                 f"or clear_cache() to re-search"
             )
         ranked = []
@@ -438,6 +448,8 @@ class LayoutDecision:
             score=d.get("score", "modeled"),
             overlap=d.get("overlap", False),
             compute_per_elem_s=d.get("compute_per_elem_s", 0.0),
+            pass_pipeline=(tuple((str(n), str(v)) for n, v in d["pass_pipeline"])
+                           if d.get("pass_pipeline") is not None else None),
         )
 
     def summary(self, top: int = 8) -> str:
@@ -599,6 +611,7 @@ def _cache_key(
     measure_kwargs: dict | None = None,
     overlap: bool = False,
     compute_per_elem_s: float = 0.0,
+    pass_fingerprint: tuple[tuple[str, str], ...] | None = None,
 ) -> str:
     from .executors import capability_fingerprint, host_fingerprint
 
@@ -635,19 +648,39 @@ def _cache_key(
             # the dataflow overlap axis (schema v6)
             "overlap": overlap,
             "compute_per_elem_s": compute_per_elem_s,
+            # the pass-pipeline fingerprint (schema v7): a reordered or
+            # re-versioned lowering pipeline searches under a fresh key
+            "passes": (list(map(list, pass_fingerprint))
+                       if pass_fingerprint is not None else None),
         },
         sort_keys=True,
     )
     return hashlib.sha256(blob.encode()).hexdigest()[:32]
 
 
-def _cache_load(path: Path, score: str = "modeled") -> LayoutDecision | None:
+def _cache_load(
+    path: Path,
+    score: str = "modeled",
+    pass_fingerprint: tuple[tuple[str, str], ...] | None = None,
+) -> LayoutDecision | None:
     try:
         text = path.read_text()
     except OSError:
         return None  # no cache entry for this key
     try:
         decision = LayoutDecision.from_json(text)
+        if (pass_fingerprint is not None
+                and decision.pass_pipeline != pass_fingerprint):
+            # a decision searched under a different lowering pipeline
+            # (pass reordered, added, or re-versioned) may rank layouts
+            # a current pass would lower differently — reject loudly so
+            # the re-search is visible, never silent (schema v7)
+            raise CacheSchemaError(
+                f"cache entry was searched under pass pipeline "
+                f"{decision.pass_pipeline!r} but the current pipeline is "
+                f"{pass_fingerprint!r}; an edited lowering invalidates "
+                f"cached layout decisions — re-searching"
+            )
         if decision.score != score:
             # modeled- and measured-scored decisions rank by different
             # objectives; silently serving one for the other would defeat
@@ -721,6 +754,7 @@ def autotune(
     measure_kwargs: dict | None = None,
     overlap: bool = False,
     compute_per_elem_s: float = 0.0,
+    pass_fingerprint: Sequence[Sequence[str]] | None = None,
     cache: bool = True,
     cache_dir: Path | str | None = None,
 ) -> LayoutDecision:
@@ -812,15 +846,21 @@ def autotune(
     codec_id = [cdc.name, cdc.bits] if cdc is not None else None
     til = tuple(tuple(int(x) for x in t) for t in tilings) if tilings is not None else None
     mkw = dict(measure_kwargs or {})
+    if pass_fingerprint is None:
+        # a bare autotune() call searches for the default lowering pipeline;
+        # compile() threads the fingerprint of whatever pipeline it runs
+        from .passes import default_pass_fingerprint
+        pass_fingerprint = default_pass_fingerprint()
+    fp = tuple((str(n), str(v)) for n, v in pass_fingerprint)
 
     key = _cache_key(prog, sp, model, seed, budget, til, contiguity_levels,
                      max_halo_elems, refine_top, n_ports, port_strategies,
                      storage, codec_id, footprint_weight,
                      score, measure_top, mkw,
-                     overlap, compute_per_elem_s)
+                     overlap, compute_per_elem_s, fp)
     path = (Path(cache_dir) if cache_dir is not None else default_cache_dir()) / f"{key}.json"
     if cache:
-        hit = _cache_load(path, score)
+        hit = _cache_load(path, score, fp)
         if hit is not None:
             return dataclasses.replace(hit, from_cache=True)
 
@@ -941,6 +981,7 @@ def autotune(
         score=score,
         overlap=overlap,
         compute_per_elem_s=compute_per_elem_s,
+        pass_pipeline=fp,
     )
     if cache:
         _cache_store(path, decision)

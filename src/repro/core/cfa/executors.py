@@ -1,16 +1,15 @@
 """Execution backends behind ``repro.cfa.compile`` — one registry, one gate.
 
 Before this module, running a compiled stencil meant picking one of five
-hand-wired entry points (``CFAPipeline.sweep`` / ``sweep_wavefront`` /
-``sweep_wavefront(use_kernel=True)`` / ``sweep_wavefront_sharded`` / the
-kernel ``*_from_autotuned`` wrappers), each with its own dimensionality and
-port-count restrictions enforced — or not — at a different layer.  Here the
-same executors are registered objects with *declared* capabilities, so
-backend selection, N-D gating and port-count validation happen in exactly
-one place (:func:`check_backend` / :func:`select_backend`).
+hand-wired entry points (the ``CFAPipeline`` sweep variants and the kernel
+wrappers), each with its own dimensionality and port-count restrictions
+enforced — or not — at a different layer.  Here the same executors are
+registered objects with *declared* capabilities, so backend selection, N-D
+gating and port-count validation happen in exactly one place
+(:func:`check_backend` / :func:`select_backend`).
 
-Registered backends (all return the same payload as ``CFAPipeline.sweep``:
-the facet-storage dict, bit-exact across backends):
+Registered backends (all return the same payload — the facet-storage dict,
+bit-exact across backends):
 
 * ``reference`` — untiled oracle (``reference_volume``) scattered into facet
   storage; the ground truth everything else is compared against.

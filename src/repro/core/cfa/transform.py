@@ -10,8 +10,9 @@ form), a rectangular space and a tiling, :class:`CFAPipeline` provides
 * ``execute_tile`` — run the tile's plane recurrence on the halo buffer,
 * ``copy_out``     — write the tile's facet blocks (full-tile contiguity:
   each is one contiguous store),
-* ``sweep``        — the whole accelerator loop over tiles in lexicographic
-  order (the legal schedule under backward dependences).
+* ``_sweep``       — the whole accelerator loop over tiles in lexicographic
+  order (the legal schedule under backward dependences); the executor
+  registry (``repro.core.cfa.executors``) is the public way to run it.
 
 On real hardware the three phases run as a coarse-grain pipeline
 (paper Fig. 13, DATAFLOW); in Pallas the same overlap comes for free from
@@ -36,7 +37,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .deprecation import warn_deprecated as _deprecated
 from .facets import FacetSpec, build_facet_specs, row_major_strides
 from .programs import StencilProgram
 from .spaces import IterSpace, Tiling, box_points
@@ -58,6 +58,13 @@ class CFAPipeline:
     contiguity: str = "intra-tile"
     # the autotuner decision this pipeline was built from, if any
     decision: object | None = dataclasses.field(default=None, repr=False, compare=False)
+    # the compile-time facet->port split (the port_repartition pass); the
+    # sharded sweep prefers it over re-deriving one from the decision
+    port_assignment: object | None = dataclasses.field(default=None, repr=False, compare=False)
+    # round-trip every halo gather through the int8 compression hooks of
+    # repro.distributed.compression (lossy halo traffic, the distribute
+    # pass's compression knob; False keeps results bit-exact)
+    halo_quantize: bool = False
     specs: Mapping[int, FacetSpec] = dataclasses.field(init=False)
     num_tiles: tuple[int, ...] = dataclasses.field(init=False)
 
@@ -80,58 +87,6 @@ class CFAPipeline:
         self.num_tiles = self.tiling.num_tiles(self.space)
         if 0 not in self.specs:
             raise ValueError("time axis must carry a facet (w_0 >= 1)")
-
-    @classmethod
-    def from_autotuned(
-        cls,
-        program: StencilProgram | str,
-        space: IterSpace | tuple[int, ...],
-        *,
-        model=None,
-        decision=None,
-        kernel_compatible: bool = False,
-        **autotune_kwargs,
-    ) -> "CFAPipeline":
-        """Build the pipeline from the autotuner's winning CFA layout.
-
-        .. deprecated:: use ``repro.cfa.compile(program, space,
-           layout="autotune")`` — same search, plus backend selection and
-           port validation in one place.
-
-        Runs ``repro.core.cfa.autotune.autotune`` (or reuses ``decision``)
-        and instantiates the pipeline at the best CFA candidate's tile sizes,
-        extension directions and contiguity level.  ``kernel_compatible``
-        restricts the choice to layouts the ``facet_fetch`` Pallas kernel can
-        address (the paper-default layout with w | t and >= 2 tiles/axis).
-        Extra keyword arguments (seed, budget, cache_dir, ...) pass through
-        to ``autotune``.
-        """
-        _deprecated("CFAPipeline.from_autotuned",
-                    'repro.cfa.compile(..., layout="autotune")')
-        from .autotune import autotune
-        from .bandwidth import AXI_ZC706
-        from .programs import get_program
-
-        prog = get_program(program) if isinstance(program, str) else program
-        sp = space if isinstance(space, IterSpace) else IterSpace(tuple(space))
-        if decision is None:
-            decision = autotune(prog, sp, model if model is not None else AXI_ZC706,
-                                **autotune_kwargs)
-        elif decision.program != prog.name or tuple(decision.space) != sp.sizes:
-            raise ValueError(
-                f"decision is for {decision.program!r} @ {tuple(decision.space)}, "
-                f"not {prog.name!r} @ {sp.sizes}"
-            )
-        best = decision.best_cfa(kernel_compatible=kernel_compatible)
-        cand = best.candidate
-        return cls(
-            prog,
-            sp,
-            Tiling(cand.tile),
-            ext_dirs=cand.ext_dirs,
-            contiguity=cand.contiguity or "intra-tile",
-            decision=decision,
-        )
 
     # -- storage -----------------------------------------------------------
 
@@ -270,6 +225,14 @@ class CFAPipeline:
                         spec.num_tiles[a] for a in spec.outer_axes[1:]
                     )
                 vals = flat[jnp.asarray(offs)]
+            if self.halo_quantize:
+                # model compressed halo traffic: each gathered message
+                # round-trips through the symmetric int8 quantizer (lossy;
+                # see repro.distributed.compression)
+                from repro.distributed.compression import (
+                    dequantize_int8, quantize_int8)
+
+                vals = dequantize_int8(*quantize_int8(vals)).astype(vals.dtype)
             pieces.append((pts - (lo - w), vals))
         devices = set()
         for arr in facets.values():
@@ -345,16 +308,9 @@ class CFAPipeline:
 
     # -- full sweep ----------------------------------------------------------------
 
-    def sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
-        """Run the whole tiled computation through facet storage.
-
-        .. deprecated:: use ``repro.cfa.compile(..., backend="sweep")``.
-        """
-        _deprecated("CFAPipeline.sweep",
-                    'repro.cfa.compile(..., backend="sweep")')
-        return self._sweep(inputs, dtype)
-
     def _sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
+        """Run the whole tiled computation through facet storage (the
+        ``backend="sweep"`` executor's entry point)."""
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
         for tile in itertools.product(*(range(n) for n in self.num_tiles)):
@@ -377,21 +333,12 @@ class CFAPipeline:
             waves.setdefault(sum(tile), []).append(tile)
         return [waves[s] for s in sorted(waves)]
 
-    def sweep_wavefront(self, inputs: jnp.ndarray, dtype=jnp.float32,
-                        use_kernel: bool = False) -> dict[int, jnp.ndarray]:
-        """Wavefront-parallel sweep: each wave's tiles execute as one batch
-        (through the Pallas tile executor when ``use_kernel``).
-
-        .. deprecated:: use ``repro.cfa.compile(..., backend="wavefront")``
-           (or ``backend="pallas"`` for the kernel path).
-        """
-        _deprecated("CFAPipeline.sweep_wavefront",
-                    'repro.cfa.compile(..., backend="wavefront" | "pallas")')
-        return self._sweep_wavefront(inputs, dtype, use_kernel=use_kernel)
-
     def _sweep_wavefront(self, inputs: jnp.ndarray, dtype=jnp.float32,
                          use_kernel: bool = False,
                          interpret: bool = True) -> dict[int, jnp.ndarray]:
+        """Wavefront-parallel sweep: each wave's tiles execute as one batch
+        (through the Pallas tile executor when ``use_kernel``) — the
+        ``backend="wavefront"``/``"pallas"`` executors' entry point."""
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
         interior = self._interior_slices(self.widths)
@@ -478,7 +425,7 @@ class CFAPipeline:
 
     # -- multi-port sharded sweep -------------------------------------------
 
-    def sweep_wavefront_sharded(
+    def _sweep_wavefront_sharded(
         self,
         inputs: jnp.ndarray,
         dtype=jnp.float32,
@@ -491,17 +438,15 @@ class CFAPipeline:
     ) -> dict[int, jnp.ndarray]:
         """Multi-port wavefront sweep: facet arrays sharded over a mesh axis
         per the port repartition, anti-diagonal tile waves executed in
-        parallel via ``shard_map`` (paper §VII made an execution path).
-
-        .. deprecated:: use ``repro.cfa.compile(..., backend="sharded",
-           n_ports=...)``.
+        parallel via ``shard_map`` (paper §VII made an execution path) —
+        the ``backend="sharded"`` executor's entry point.
 
         * the facet arrays are placed on their assigned port's device
           (``repro.distributed.sharding.shard_facets``; the facet array is the
           unit of contiguity, so facet-granular repartition == whole-array
-          placement — ``assignment`` defaults to the LPT split of
-          ``multiport.assign_ports``, or the autotuned decision's when this
-          pipeline came from ``CFAPipeline.from_autotuned(n_ports=...)``);
+          placement — ``assignment`` defaults to this pipeline's compile-time
+          ``port_assignment`` (the port_repartition pass), then the autotuned
+          decision's split, then the LPT split of ``multiport.assign_ports``);
         * every wavefront's tiles are independent (backward deps strictly
           decrease the coordinate sum), so each wave is batched, padded to a
           multiple of the mesh axis, and executed concurrently — one shard of
@@ -509,28 +454,10 @@ class CFAPipeline:
           per shard) when ``use_kernel``, else an inline ``shard_map`` of the
           plane recurrence.
 
-        Bit-exact against the single-port ``sweep``: device placement and
+        Bit-exact against the single-port ``_sweep``: device placement and
         shard_map batching change *where* tiles run, never the plane
         arithmetic or the order facet blocks are committed.
         """
-        _deprecated("CFAPipeline.sweep_wavefront_sharded",
-                    'repro.cfa.compile(..., backend="sharded", n_ports=...)')
-        return self._sweep_wavefront_sharded(
-            inputs, dtype, n_ports=n_ports, mesh=mesh, axis=axis,
-            assignment=assignment, use_kernel=use_kernel,
-        )
-
-    def _sweep_wavefront_sharded(
-        self,
-        inputs: jnp.ndarray,
-        dtype=jnp.float32,
-        *,
-        n_ports: int = 2,
-        mesh=None,
-        axis: str = "port",
-        assignment=None,
-        use_kernel: bool = False,
-    ) -> dict[int, jnp.ndarray]:
         from jax.sharding import NamedSharding
 
         from repro.core.cfa.multiport import assign_ports
@@ -538,12 +465,16 @@ class CFAPipeline:
             P, port_mesh, shard_facets, shard_map_compat)
 
         if assignment is None:
+            pa = self.port_assignment
+            if pa is not None and getattr(pa, "n_ports", None) == n_ports:
+                assignment = pa
+        if assignment is None:
             decision = self.decision
             if decision is not None and getattr(decision, "n_ports", 1) == n_ports:
                 # only reuse the decision's facet->port split when this
                 # pipeline actually instantiates the candidate it was
-                # computed for (from_autotuned(kernel_compatible=True) may
-                # have picked a different, kernel-addressable layout)
+                # computed for (a kernel-compatible re-pick may have chosen
+                # a different, kernel-addressable layout)
                 try:
                     best = decision.best_cfa()
                 except LookupError:

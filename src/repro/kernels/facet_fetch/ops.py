@@ -1,37 +1,11 @@
-from repro.core.cfa.deprecation import warn_deprecated as _deprecated
-
 from .facet_fetch import fetch_interior_halos
 from .ref import fetch_interior_halos_ref
 
 __all__ = [
     "fetch_interior_halos",
     "fetch_interior_halos_ref",
-    "fetch_interior_halos_from_autotuned",
     "fetch_interior_halos_sharded",
 ]
-
-
-def fetch_interior_halos_from_autotuned(program_name, facets, decision, *,
-                                        interpret=True):
-    """Block-wise halo fetch at an autotuned LayoutDecision's winning layout.
-
-    .. deprecated:: use ``repro.cfa.compile(..., layout=decision,
-       backend="pallas")``, which resolves the decision's layout once for
-       both the fetch and the execute stage.
-
-    The kernel's static BlockSpecs address only the paper-default facet
-    layout, so the decision's best *kernel-compatible* CFA candidate is used
-    (default extension dirs, intra-tile contiguity, w | t, >= 2 tiles/axis);
-    ``facets`` must have been allocated at that candidate's tile sizes, e.g.
-    via ``CFAPipeline.from_autotuned(..., kernel_compatible=True)``.
-    """
-    _deprecated("fetch_interior_halos_from_autotuned",
-                'repro.cfa.compile(..., layout=decision, backend="pallas")')
-    best = decision.best_cfa(kernel_compatible=True)
-    return fetch_interior_halos(
-        program_name, facets, tuple(decision.space),
-        tuple(best.candidate.tile), interpret=interpret,
-    )
 
 
 def fetch_interior_halos_sharded(program_name, facets, space, tile,

@@ -1,14 +1,11 @@
 """Jit'd public wrappers for the CFA stencil tile executor.
 
 ``execute_tiles`` / ``execute_tiles_sharded`` are the executor adapters the
-``pallas`` and ``sharded`` backends of ``repro.cfa.compile`` drive; the
-``*_from_autotuned`` wrapper is a deprecated shim kept for compatibility.
+``pallas`` and ``sharded`` backends of ``repro.cfa.compile`` drive.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
-
-from repro.core.cfa.deprecation import warn_deprecated as _deprecated
 
 from .stencil import execute_tiles
 from .ref import execute_tiles_ref
@@ -17,7 +14,6 @@ __all__ = [
     "execute_tiles",
     "execute_tiles_ref",
     "stencil_tile_op",
-    "execute_tiles_from_autotuned",
     "execute_tiles_sharded",
 ]
 
@@ -36,35 +32,6 @@ def stencil_tile_op(
     return execute_tiles_ref(program_name, halos, tile)
 
 
-def execute_tiles_from_autotuned(
-    program_name: str,
-    halos: jnp.ndarray,
-    decision,
-    *,
-    kernel_compatible: bool = False,
-    use_kernel: bool = True,
-    interpret: bool = True,
-) -> jnp.ndarray:
-    """Execute tile batches at the tile size an autotuned LayoutDecision chose.
-
-    .. deprecated:: use ``repro.cfa.compile(..., layout=decision,
-       backend="pallas")`` — the compiled stencil gathers and executes at
-       the decision's winning tile in one call.
-
-    ``decision`` is a ``repro.core.cfa.autotune.LayoutDecision`` (e.g. from
-    ``CFAPipeline.from_autotuned(...).decision``); the halo batch must have
-    been gathered at the decision's winning tile sizes.  When the halos came
-    from ``fetch_interior_halos_from_autotuned`` (which is restricted to
-    kernel-addressable layouts), pass ``kernel_compatible=True`` here too so
-    both wrappers resolve the *same* candidate's tile.
-    """
-    _deprecated("execute_tiles_from_autotuned",
-                'repro.cfa.compile(..., layout=decision, backend="pallas")')
-    tile = tuple(decision.best_cfa(kernel_compatible=kernel_compatible).candidate.tile)
-    return stencil_tile_op(program_name, halos, tile,
-                           use_kernel=use_kernel, interpret=interpret)
-
-
 def execute_tiles_sharded(
     program_name: str,
     halos: jnp.ndarray,  # (B, w0+t0, .., w_{d-1}+t_{d-1}), B % mesh axis size == 0
@@ -80,8 +47,8 @@ def execute_tiles_sharded(
     independent tiles) is split over the ``axis`` mesh dimension and each
     shard runs the Pallas tile executor on its own device — tiles on
     different ports genuinely execute concurrently.  The caller pads the
-    batch to a multiple of the mesh axis size
-    (``CFAPipeline.sweep_wavefront_sharded`` does).
+    batch to a multiple of the mesh axis size (the sharded executor's
+    ``CFAPipeline._sweep_wavefront_sharded`` does).
     """
     import jax
     from jax.sharding import NamedSharding, PartitionSpec as P

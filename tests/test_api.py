@@ -2,18 +2,16 @@
 
 Covers the acceptance criteria of the API redesign:
 
-* ``cfa.compile(...)(inputs)`` is bit-exact against the legacy
-  ``CFAPipeline`` entry point it supersedes, for every Table I program
+* ``cfa.compile(...)(inputs)`` is bit-exact against the hand-wired
+  ``CFAPipeline`` internals it drives, for every Table I program
   (plus the N-D additions) on every eligible backend;
 * backend auto-selection follows the documented rules and the capability
   gate rejects ineligible (backend, program, space, n_ports) combinations
   with a clear error;
 * the ``Target`` registry resolves names/models and enforces port budgets;
-* every legacy shim emits a ``DeprecationWarning`` (and still works);
+* the legacy shims (deprecated through PR 4-6) are really gone;
 * ``repro.cfa.__all__`` is pinned — accidental public-surface changes fail.
 """
-import warnings
-
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -34,13 +32,13 @@ CASES = [
     ("heat3d", (4, 4, 4, 4), (2, 2, 2, 2)),
 ]
 
-# backend -> the legacy CFAPipeline entry point it replaces
+# backend -> the CFAPipeline internal the executor drives
 LEGACY = {
-    "sweep": lambda p, x: p.sweep(x, dtype=jnp.float64),
-    "wavefront": lambda p, x: p.sweep_wavefront(x, dtype=jnp.float64),
-    "pallas": lambda p, x: p.sweep_wavefront(x, dtype=jnp.float64,
+    "sweep": lambda p, x: p._sweep(x, dtype=jnp.float64),
+    "wavefront": lambda p, x: p._sweep_wavefront(x, dtype=jnp.float64),
+    "pallas": lambda p, x: p._sweep_wavefront(x, dtype=jnp.float64,
                                              use_kernel=True),
-    "sharded": lambda p, x: p.sweep_wavefront_sharded(x, dtype=jnp.float64,
+    "sharded": lambda p, x: p._sweep_wavefront_sharded(x, dtype=jnp.float64,
                                                       n_ports=2),
 }
 
@@ -77,9 +75,7 @@ def test_compile_bit_exact_vs_legacy(name, space, tile, backend):
     x = _inputs(space, tile, name)
     got = compiled(x, dtype=jnp.float64)
     legacy_pipe = CFAPipeline(get_program(name), IterSpace(space), Tiling(tile))
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        ref = LEGACY[backend](legacy_pipe, x)
+    ref = LEGACY[backend](legacy_pipe, x)
     assert set(got) == set(ref)
     for k in ref:
         assert (np.asarray(got[k]) == np.asarray(ref[k])).all(), f"facet {k}"
@@ -317,69 +313,23 @@ def test_compiled_plan_and_report():
 
 
 # ---------------------------------------------------------------------------
-# legacy shims: still work, now warn
+# legacy shims: removed for good (deprecated through PR 4-6, deleted here)
 # ---------------------------------------------------------------------------
 
-def _shim_pipe():
-    return CFAPipeline(get_program("jacobi2d5p"), IterSpace((4, 4, 4)),
-                       Tiling((4, 2, 2)))
-
-
-def test_shim_sweep_warns():
-    pipe = _shim_pipe()
-    x = _inputs((4, 4, 4), (4, 2, 2), "jacobi2d5p")
-    with pytest.warns(DeprecationWarning, match="CFAPipeline.sweep"):
-        pipe.sweep(x)
-
-
-def test_shim_sweep_wavefront_warns():
-    pipe = _shim_pipe()
-    x = _inputs((4, 4, 4), (4, 2, 2), "jacobi2d5p")
-    with pytest.warns(DeprecationWarning, match="sweep_wavefront"):
-        pipe.sweep_wavefront(x)
-
-
-def test_shim_sweep_wavefront_sharded_warns():
-    pipe = _shim_pipe()
-    x = _inputs((4, 4, 4), (4, 2, 2), "jacobi2d5p")
-    with pytest.warns(DeprecationWarning, match="sweep_wavefront_sharded"):
-        pipe.sweep_wavefront_sharded(x, n_ports=2)
-
-
-def test_shim_from_autotuned_warns(tmp_path):
-    with pytest.warns(DeprecationWarning, match="from_autotuned"):
-        CFAPipeline.from_autotuned("jacobi2d5p", (8, 8, 8), budget=16,
-                                   cache_dir=tmp_path)
-
-
-def test_shim_execute_tiles_from_autotuned_warns(tmp_path):
-    from repro.core.cfa import autotune
-    from repro.kernels.stencil import execute_tiles_from_autotuned
-
-    decision = autotune("jacobi2d5p", (8, 8, 8), budget=16,
-                        cache_dir=tmp_path)
-    tile = decision.best_cfa().candidate.tile
-    w = get_program("jacobi2d5p").widths
-    halos = jnp.zeros((1, *(wa + ta for wa, ta in zip(w, tile))))
-    with pytest.warns(DeprecationWarning, match="execute_tiles_from_autotuned"):
-        execute_tiles_from_autotuned("jacobi2d5p", halos, decision)
-
-
-def test_shim_fetch_interior_halos_from_autotuned_warns(tmp_path):
-    from repro.core.cfa import autotune
-    from repro.kernels.facet_fetch import fetch_interior_halos_from_autotuned
-
-    decision = autotune("jacobi2d5p", (8, 8, 8), budget=24,
-                        cache_dir=tmp_path)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        pipe = CFAPipeline.from_autotuned("jacobi2d5p", (8, 8, 8),
-                                          decision=decision,
-                                          kernel_compatible=True)
-    facets = pipe.init_facets(jnp.float32)
-    with pytest.warns(DeprecationWarning,
-                      match="fetch_interior_halos_from_autotuned"):
-        fetch_interior_halos_from_autotuned("jacobi2d5p", facets, decision)
+def test_legacy_shims_are_gone():
+    for name in ("sweep", "sweep_wavefront", "sweep_wavefront_sharded",
+                 "from_autotuned"):
+        assert not hasattr(CFAPipeline, name), (
+            f"CFAPipeline.{name} was deleted; use cfa.compile() "
+            f"(or the _-prefixed internal from the executors)"
+        )
+    import repro.kernels.facet_fetch as facet_fetch
+    import repro.kernels.stencil as stencil
+    assert not hasattr(stencil, "execute_tiles_from_autotuned")
+    assert not hasattr(facet_fetch, "fetch_interior_halos_from_autotuned")
+    # the deprecation machinery itself left with its last clients
+    with pytest.raises(ImportError):
+        import repro.core.cfa.deprecation  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -399,7 +349,9 @@ PUBLIC_API = [
     "CacheSchemaError",
     "CalibratedModel",
     "Calibration",
+    "CompileState",
     "CompiledStencil",
+    "DEFAULT_PASSES",
     "Deps",
     "EXECUTORS",
     "Executor",
@@ -408,6 +360,10 @@ PUBLIC_API = [
     "LayoutCandidate",
     "LayoutDecision",
     "PROGRAMS",
+    "Pass",
+    "PassPipeline",
+    "PassTrace",
+    "PipelineError",
     "PortedPlan",
     "SCORE_MODES",
     "STORAGE_MODES",
@@ -426,6 +382,9 @@ PUBLIC_API = [
     "calibrate",
     "compile",
     "dedup_facets",
+    "default_pass_fingerprint",
+    "default_pipeline",
+    "estimate_facet_bytes",
     "fit_burst_model",
     "get_codec",
     "get_executor",

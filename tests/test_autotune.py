@@ -251,20 +251,87 @@ def test_ranking_is_sorted_by_effective_bw(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# schema v7: the pass-pipeline fingerprint
+# ---------------------------------------------------------------------------
+
+def test_cache_key_records_pass_pipeline(tmp_path):
+    """Schema v7: the lowering pipeline's (name, version) fingerprint is
+    folded into the cache key, so a reordered/edited pipeline searches
+    fresh instead of silently reusing the old pipeline's decision."""
+    from repro.core.cfa.passes import default_pass_fingerprint
+
+    prog = PROGRAMS["jacobi2d5p"]
+    kw = dict(budget=16, seed=0, cache_dir=tmp_path)
+    first = autotune(prog, (32, 32, 32), AXI_ZC706, **kw)
+    assert first.pass_pipeline == default_pass_fingerprint()
+    assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
+    # an edited pipeline (bumped pass version) keys differently: a miss
+    edited = tuple((n, "99") if n == "layout_search" else (n, v)
+                   for n, v in default_pass_fingerprint())
+    other = autotune(prog, (32, 32, 32), AXI_ZC706, **kw,
+                     pass_fingerprint=edited)
+    assert not other.from_cache
+    assert other.pass_pipeline == edited
+    # both keys now populated: each repeat query is a clean hit
+    assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw).from_cache
+    assert autotune(prog, (32, 32, 32), AXI_ZC706, **kw,
+                    pass_fingerprint=edited).from_cache
+
+
+def test_foreign_pass_pipeline_entry_rejected_loudly(tmp_path):
+    """Schema v7: an entry recording a different pass pipeline than the
+    query's (e.g. written by a buggy tool under the wrong key) warns and
+    re-searches instead of silently serving a stale lowering's decision."""
+    import json
+
+    from repro.core.cfa.autotune import _cache_load
+    from repro.core.cfa.passes import default_pass_fingerprint
+
+    prog = PROGRAMS["heat1d"]
+    kw = dict(budget=8, seed=0, cache_dir=tmp_path)
+    first = autotune(prog, (8, 64), AXI_ZC706, **kw)
+    (entry,) = tmp_path.glob("*.json")
+    blob = json.loads(entry.read_text())
+    blob["pass_pipeline"] = [["bogus_pass", "1"]]  # forge a foreign lowering
+    entry.write_text(json.dumps(blob))
+    # the forgery is valid JSON — only the fingerprint check rejects it
+    assert _cache_load(entry, "modeled") is not None
+    with pytest.warns(RuntimeWarning, match="pass pipeline"):
+        redo = autotune(prog, (8, 64), AXI_ZC706, **kw)
+    assert not redo.from_cache
+    assert redo.best.candidate == first.best.candidate
+    # the re-search overwrote the forged entry: next call is a clean hit
+    assert autotune(prog, (8, 64), AXI_ZC706, **kw).from_cache
+
+
+def test_decision_pass_pipeline_roundtrips(tmp_path):
+    prog = PROGRAMS["heat1d"]
+    d = autotune(prog, (8, 64), AXI_ZC706, budget=8, seed=0, cache=False,
+                 cache_dir=tmp_path)
+    back = LayoutDecision.from_json(d.to_json())
+    assert back.pass_pipeline == d.pass_pipeline is not None
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: the autotuned pipeline is still exact
 # ---------------------------------------------------------------------------
 
-def test_from_autotuned_pipeline_matches_oracle(tmp_path):
+def test_autotuned_compile_matches_oracle(tmp_path):
+    from repro import cfa
+
     prog = PROGRAMS["jacobi2d5p"]
     space = (16, 16, 16)
-    pipe = CFAPipeline.from_autotuned(prog, space, budget=24, seed=0,
-                                      cache_dir=tmp_path)
+    compiled = cfa.compile(prog.name, space, layout="autotune",
+                           backend="sweep",
+                           autotune_kwargs=dict(budget=24, seed=0,
+                                                cache_dir=tmp_path))
+    pipe = compiled.pipeline
     assert pipe.decision is not None
     assert pipe.tiling.sizes == pipe.decision.best_cfa().candidate.tile
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])),
                          jnp.float32)
-    facets = pipe.sweep(inputs)
+    facets = compiled(inputs, dtype=jnp.float32)
     V = pipe.reference_volume(inputs)
     spec = pipe.specs[0]
     if spec.tile_sizes[0] % spec.width:
@@ -274,21 +341,20 @@ def test_from_autotuned_pipeline_matches_oracle(tmp_path):
     assert err < 1e-4
 
 
-def test_from_autotuned_kernel_compatible_fetch(tmp_path):
-    from repro.kernels.facet_fetch import fetch_interior_halos_from_autotuned
+def test_autotuned_kernel_compatible_fetch(tmp_path):
+    from repro.kernels.facet_fetch import fetch_interior_halos
 
     prog = PROGRAMS["jacobi2d5p"]
     space = (16, 16, 16)
-    pipe = CFAPipeline.from_autotuned(prog, space, budget=24, seed=0,
-                                      kernel_compatible=True,
-                                      cache_dir=tmp_path)
-    cand = pipe.decision.best_cfa(kernel_compatible=True).candidate
+    decision = autotune(prog, space, AXI_ZC706, budget=24, seed=0,
+                        cache_dir=tmp_path)
+    cand = decision.best_cfa(kernel_compatible=True).candidate
     assert cand.is_default_cfa_layout(3)
+    pipe = CFAPipeline(prog, IterSpace(space), Tiling(cand.tile))
     rng = np.random.default_rng(1)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])),
                          jnp.float32)
-    facets = pipe.sweep(inputs)
-    halos = fetch_interior_halos_from_autotuned(prog.name, facets,
-                                                pipe.decision)
+    facets = pipe._sweep(inputs)
+    halos = fetch_interior_halos(prog.name, facets, space, cand.tile)
     ref = pipe.copy_in(facets, tuple(1 for _ in range(3)))
     assert float(jnp.abs(halos[0, 0, 0] - ref).max()) < 1e-6

@@ -136,8 +136,8 @@ def test_wavefront_sweep_matches_sequential(name, space, tile, kernel):
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])),
                          jnp.float32)
-    seq = pipe.sweep(inputs)
-    wav = pipe.sweep_wavefront(inputs, use_kernel=kernel)
+    seq = pipe._sweep(inputs)
+    wav = pipe._sweep_wavefront(inputs, use_kernel=kernel)
     for k in pipe.specs:
         np.testing.assert_allclose(np.asarray(seq[k]), np.asarray(wav[k]),
                                    rtol=1e-5, atol=1e-5)

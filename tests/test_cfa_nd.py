@@ -79,7 +79,7 @@ def test_nd_sweep_matches_oracle(name, space, tile):
     pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])))
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     V = pipe.reference_volume(inputs)
     for k, spec in pipe.specs.items():
         got = facets[k]
@@ -100,9 +100,9 @@ def test_nd_wavefront_and_kernel_path(name, space, tile):
     pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
     rng = np.random.default_rng(1)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])))
-    seq = pipe.sweep(inputs, dtype=jnp.float64)
+    seq = pipe._sweep(inputs, dtype=jnp.float64)
     for kernel in (False, True):
-        wav = pipe.sweep_wavefront(inputs, dtype=jnp.float64, use_kernel=kernel)
+        wav = pipe._sweep_wavefront(inputs, dtype=jnp.float64, use_kernel=kernel)
         for k in seq:
             np.testing.assert_allclose(np.asarray(seq[k]), np.asarray(wav[k]),
                                        rtol=1e-12, atol=1e-12)
@@ -114,8 +114,8 @@ def test_2d_sharded_sweep_bit_exact():
     pipe = CFAPipeline(prog, IterSpace((8, 8)), Tiling((4, 4)))
     rng = np.random.default_rng(2)
     inputs = jnp.asarray(rng.normal(size=(1, 8)))
-    ref = pipe.sweep(inputs, dtype=jnp.float64)
-    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
+    ref = pipe._sweep(inputs, dtype=jnp.float64)
+    got = pipe._sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
     for k in ref:
         assert (np.asarray(ref[k]) == np.asarray(got[k])).all(), f"facet {k}"
 
@@ -201,10 +201,12 @@ def test_nd_autotune_valid_decision(name, space, tmp_path):
     assert best.candidate.scheme == "cfa"
     assert len(best.candidate.tile) == len(space)
     # the decision instantiates and stays exact end-to-end
-    pipe = CFAPipeline.from_autotuned(prog, space, decision=dec)
+    from repro import cfa
+    pipe = cfa.compile(prog.name, space, layout=dec,
+                       backend="sweep").pipeline
     rng = np.random.default_rng(4)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])))
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     V = pipe.reference_volume(inputs)
     spec = pipe.specs[0]
     if spec.tile_sizes[0] % spec.width == 0:

@@ -53,7 +53,7 @@ def test_sweep_matches_oracle(name, space, tile):
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(w0, *space[1:])))
 
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     V = pipe.reference_volume(inputs)
 
     # Strongest check: every facet block equals the packed oracle volume,
@@ -91,7 +91,7 @@ def test_final_time_plane_recoverable():
     pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
     rng = np.random.default_rng(1)
     inputs = jnp.asarray(rng.normal(size=(1, 8, 8)))
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     V = pipe.reference_volume(inputs)
 
     spec = pipe.specs[0]

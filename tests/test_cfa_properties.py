@@ -173,7 +173,7 @@ def test_nd_sweep_matches_oracle_random_tilings(data):
     rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1),
                                           label="seed"))
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])))
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     V = pipe.reference_volume(inputs)
     for k, spec in pipe.specs.items():
         got = facets[k][1:] if k == 0 else facets[k]

@@ -183,7 +183,7 @@ def test_facet_fetch_kernel_matches_copy_in(name, space, tile):
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(pipe.specs[0].width, *space[1:])),
                          jnp.float32)
-    facets = pipe.sweep(inputs, dtype=jnp.float32)
+    facets = pipe._sweep(inputs, dtype=jnp.float32)
     got = fetch_interior_halos(name, facets, space, tile, interpret=True)
     want = fetch_interior_halos_ref(name, facets, space, tile)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),

@@ -234,8 +234,8 @@ def test_sweep_wavefront_sharded_smoke():
     pipe = CFAPipeline(prog, IterSpace((4, 4, 4)), Tiling((4, 2, 2)))
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(1, 4, 4)))
-    ref = pipe.sweep(inputs, dtype=jnp.float64)
-    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
+    ref = pipe._sweep(inputs, dtype=jnp.float64)
+    got = pipe._sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
     for k in ref:
         assert (np.asarray(ref[k]) == np.asarray(got[k])).all(), f"facet {k}"
 
@@ -261,8 +261,8 @@ def test_sweep_wavefront_sharded_bit_exact(name, space, tile):
     w0 = pipe.specs[0].width
     rng = np.random.default_rng(0)
     inputs = jnp.asarray(rng.normal(size=(w0, *space[1:])))
-    ref = pipe.sweep(inputs, dtype=jnp.float64)
-    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
+    ref = pipe._sweep(inputs, dtype=jnp.float64)
+    got = pipe._sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2)
     for k in ref:
         assert (np.asarray(ref[k]) == np.asarray(got[k])).all(), f"facet {k}"
 
@@ -274,8 +274,8 @@ def test_sweep_wavefront_sharded_pads_odd_waves():
     pipe = CFAPipeline(prog, IterSpace((8, 8, 8)), Tiling((4, 4, 4)))
     rng = np.random.default_rng(1)
     inputs = jnp.asarray(rng.normal(size=(1, 8, 8)))
-    ref = pipe.sweep(inputs, dtype=jnp.float64)
-    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=3)
+    ref = pipe._sweep(inputs, dtype=jnp.float64)
+    got = pipe._sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=3)
     for k in ref:
         assert (np.asarray(ref[k]) == np.asarray(got[k])).all()
 
@@ -287,8 +287,8 @@ def test_sweep_wavefront_sharded_kernel_path():
     pipe = CFAPipeline(prog, IterSpace((8, 8, 8)), Tiling((4, 4, 4)))
     rng = np.random.default_rng(2)
     inputs = jnp.asarray(rng.normal(size=(1, 8, 8)))
-    ref = pipe.sweep(inputs, dtype=jnp.float64)
-    got = pipe.sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2,
+    ref = pipe._sweep(inputs, dtype=jnp.float64)
+    got = pipe._sweep_wavefront_sharded(inputs, dtype=jnp.float64, n_ports=2,
                                        use_kernel=True)
     for k in ref:
         np.testing.assert_allclose(np.asarray(ref[k]), np.asarray(got[k]),
@@ -306,7 +306,7 @@ def test_sharded_fetch_matches_plain_fetch():
     pipe = CFAPipeline(prog, IterSpace(space), Tiling(tile))
     rng = np.random.default_rng(3)
     inputs = jnp.asarray(rng.normal(size=(1, 12, 12)))
-    facets = pipe.sweep(inputs, dtype=jnp.float64)
+    facets = pipe._sweep(inputs, dtype=jnp.float64)
     pa = assign_ports(IterSpace(space), prog.deps, Tiling(tile), 2)
     plain = fetch_interior_halos("jacobi2d5p", facets, space, tile)
     sharded = fetch_interior_halos_sharded("jacobi2d5p", facets, space, tile, pa)
