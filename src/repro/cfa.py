@@ -78,6 +78,12 @@ from repro.core.cfa import (
     get_codec,
     # the underlying pipeline (CompiledStencil.pipeline)
     CFAPipeline,
+    # static verification (compile(verify=True), cfa.verify,
+    # CompiledStencil.diagnostics(), tools/cfa_lint.py)
+    verify,
+    Diagnostic,
+    AnalysisReport,
+    VerificationError,
     # the staged lowering behind compile (CompiledStencil.trace(),
     # compile(passes=...), the autotune cache's pipeline fingerprint)
     CompileState,
@@ -141,6 +147,10 @@ __all__ = [
     "CODECS",
     "get_codec",
     "CFAPipeline",
+    "verify",
+    "Diagnostic",
+    "AnalysisReport",
+    "VerificationError",
     "CompileState",
     "Pass",
     "PassPipeline",

@@ -129,6 +129,29 @@ Lowering passes (``passes``) — ``compile`` as a staged compiler flow
       metric (``compile(host_budget=...)`` splits over the port mesh when
       the estimate exceeds it).
 
+Static analysis (``analysis``) — the compile-time verifier + burst lint
+(Iris pairs layout generation with automated efficiency analysis; Zohouri
+& Matsuoka 2019 quantify the sub-burst-length degradation CFA3xx flags)
+    * ``verify`` / ``compile(..., verify=True)`` — run the analysis suite
+      over a ``CompiledStencil``; ERROR diagnostics raise
+      ``VerificationError``; the report rides as
+      ``CompiledStencil.diagnostics()``.
+    * ``Diagnostic`` / ``AnalysisReport`` / ``VerificationError`` — one
+      coded, located, severity-tagged finding; the aggregate; the loud
+      failure mode.
+    * ``AnalysisPass`` / ``analysis_pass`` / ``DEFAULT_ANALYSES`` — the
+      read-only pass category and the default suite: CFA1xx
+      single-assignment/coverage proofs, CFA2xx overlap race detection,
+      CFA3xx burst-efficiency lint (priced by ``BurstModel``), CFA4xx
+      capability/contract checks (code table in ``docs/analysis.md``).
+    * ``check_facet_family`` / ``plan_accounting`` /
+      ``check_overlap_schedule`` / ``lint_plan`` — the pure checkers
+      (``autotune`` discards candidates failing ``plan_accounting``).
+    * ``run_analyses`` / ``verify_pipeline`` — suite runner over a
+      ``CompileState``; the default lowering + analyses pipeline.
+    * ``ineligible_reason`` (``executors``) — the non-raising capability
+      gate CFA401 reports verbatim.
+
 Front-end (``api``/``executors``) — one declarative entry point over it all
     * ``compile``          — a thin driver over the default pass pipeline;
       returns a ``CompiledStencil`` (callable; carries ``.layout``,
@@ -237,7 +260,23 @@ from .executors import (
     register_executor,
     get_executor,
     available_backends,
+    ineligible_reason,
     select_backend,
+)
+from .analysis import (
+    Diagnostic,
+    AnalysisReport,
+    VerificationError,
+    AnalysisPass,
+    analysis_pass,
+    DEFAULT_ANALYSES,
+    check_facet_family,
+    plan_accounting,
+    check_overlap_schedule,
+    lint_plan,
+    run_analyses,
+    verify,
+    verify_pipeline,
 )
 from .api import (
     Target,
@@ -274,7 +313,12 @@ __all__ = [
     "DEFAULT_PASSES", "default_pipeline", "default_pass_fingerprint",
     "estimate_facet_bytes",
     "BackendError", "Executor", "ExecutorCaps", "EXECUTORS",
-    "register_executor", "get_executor", "available_backends", "select_backend",
+    "register_executor", "get_executor", "available_backends",
+    "ineligible_reason", "select_backend",
+    "Diagnostic", "AnalysisReport", "VerificationError",
+    "AnalysisPass", "analysis_pass", "DEFAULT_ANALYSES",
+    "check_facet_family", "plan_accounting", "check_overlap_schedule",
+    "lint_plan", "run_analyses", "verify", "verify_pipeline",
     "Target", "TARGETS", "register_target", "get_target",
     "compile", "CompiledStencil",
 ]

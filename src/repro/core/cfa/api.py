@@ -157,6 +157,10 @@ class CompiledStencil:
     distributed: bool = False
     # the per-pass lowering record (PassPipeline.run), attached by compile
     lowering: tuple = dataclasses.field(default=(), repr=False, compare=False)
+    # the AnalysisReport of compile(..., verify=True); None when the
+    # lowering ran without the analysis passes (diagnostics() then runs
+    # the suite on demand)
+    analysis: object = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def backend(self) -> str:
@@ -167,6 +171,19 @@ class CompiledStencil:
         time and the state fields it changed (empty when this stencil was
         built outside a :class:`~repro.core.cfa.passes.PassPipeline`)."""
         return self.lowering
+
+    def diagnostics(self):
+        """The static-analysis report for this stencil.
+
+        Returns the :class:`~repro.core.cfa.analysis.AnalysisReport`
+        attached by ``compile(..., verify=True)``; when the lowering ran
+        without the analysis passes, runs the default suite on demand
+        (never raising — inspect ``report.errors`` / ``report.ok``)."""
+        if self.analysis is not None:
+            return self.analysis
+        from . import analysis as _analysis
+
+        return _analysis.verify(self, raise_on_error=False)
 
     @property
     def storage_map(self):
@@ -302,6 +319,7 @@ def compile(
     host_budget: int | None = None,
     halo_quantize: bool = False,
     passes: PassPipeline | None = None,
+    verify: bool = False,
 ) -> CompiledStencil:
     """Compile ``program`` on ``space`` into an executable stencil.
 
@@ -347,6 +365,13 @@ def compile(
     * ``passes`` — a custom :class:`~repro.core.cfa.passes.PassPipeline`
       to lower with instead of :func:`~repro.core.cfa.passes.
       default_pipeline` (stage order is validated at pipeline assembly).
+    * ``verify`` — append the static analysis suite
+      (:data:`~repro.core.cfa.analysis.DEFAULT_ANALYSES`) to the lowering:
+      the single-assignment/coverage proofs, the overlap race check, the
+      burst-efficiency lint and the contract checks run as read-only
+      passes; any ERROR diagnostic raises :class:`~repro.core.cfa.
+      analysis.VerificationError`, and the full report is surfaced as
+      ``compiled.diagnostics()``.
     """
     state = CompileState(
         program=program, space=space, target=target, n_ports=n_ports,
@@ -356,10 +381,26 @@ def compile(
         host_budget=host_budget, halo_quantize=halo_quantize,
     )
     pipe = default_pipeline() if passes is None else passes
+    if verify:
+        from . import analysis as _analysis
+
+        pipe = _analysis.verify_pipeline(pipe)
     final = pipe.run(state)
     if final.compiled is None:
         raise RuntimeError(
             f"pipeline {pipe.names} completed without producing a "
             f"CompiledStencil"
         )
-    return dataclasses.replace(final.compiled, lowering=final.trace)
+    compiled = dataclasses.replace(final.compiled, lowering=final.trace)
+    if verify:
+        report = _analysis.AnalysisReport(
+            tuple(final.diagnostics),
+            analyses=tuple(
+                (p.name, p.version) for p in pipe.passes
+                if isinstance(p, _analysis.AnalysisPass)
+            ),
+        )
+        compiled = dataclasses.replace(compiled, analysis=report)
+        if report.errors:
+            raise _analysis.VerificationError(report)
+    return compiled

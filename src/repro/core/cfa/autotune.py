@@ -723,6 +723,15 @@ def _cache_store(path: Path, decision: LayoutDecision) -> None:
 # --------------------------------------------------------------------------
 
 
+def _plan_verifies(plan) -> bool:
+    """Does the candidate's plan pass the static CFA1xx accounting checks?
+    ERROR-level candidates are discarded during the search — a layout whose
+    plan double-writes or under-covers must never win on modeled time."""
+    from .analysis import plan_accounting  # lazy: analysis imports passes
+
+    return not any(d.severity == "ERROR" for d in plan_accounting(plan))
+
+
 def _sample(items: list, k: int, rng: np.random.Generator) -> list:
     """First half deterministically (best-guess order), rest seeded-random."""
     if len(items) <= k:
@@ -878,6 +887,8 @@ def autotune(
             return None  # illegal candidate (e.g. w > t); skip
         # (AssertionError deliberately propagates: it flags a layout bug,
         # e.g. a non-contiguous facet write, never an illegal candidate.)
+        if not _plan_verifies(plan):
+            return None  # statically rejected (ERROR-level diagnostics)
         s = ScoredLayout.from_plan(
             cand, plan, model, n_ports=n_ports,
             port_strategies=port_strategies, overlap=overlap,

@@ -48,6 +48,7 @@ __all__ = [
     "register_executor",
     "get_executor",
     "available_backends",
+    "ineligible_reason",
     "select_backend",
     "check_backend",
     "capability_fingerprint",
@@ -302,6 +303,19 @@ def _ineligible_reason(
             f"{storage!r} facet storage (declares {caps.storages})"
         )
     return None
+
+
+def ineligible_reason(
+    executor: Executor,
+    program: StencilProgram,
+    space: IterSpace,
+    n_ports: int = 1,
+    storage: str = "redundant",
+) -> str | None:
+    """Why this backend cannot run (program, space, n_ports, storage);
+    ``None`` if it can.  The non-raising form of :func:`check_backend` —
+    what the CFA401 contract analysis reports verbatim."""
+    return _ineligible_reason(executor, program, space, n_ports, storage)
 
 
 def check_backend(

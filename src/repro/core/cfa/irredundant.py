@@ -95,6 +95,21 @@ class StorageMap:
         """Owned slots in one tile's block, per facet."""
         return {k: int(m.sum()) for k, m in self.owned.items()}
 
+    def stores(self, k: int, pts: np.ndarray) -> np.ndarray:
+        """Boolean per point: does facet ``k`` *store* it — i.e. the point
+        lies in facet ``k``'s projection domain *and* lands on an owned
+        slot?  Summed over facets this counts a point's storage slots; the
+        static verifier (``analysis.check_facet_family``) proves the count
+        is exactly one over the whole family."""
+        spec = self.specs[k]
+        pts = np.atleast_2d(np.asarray(pts, dtype=np.int64))
+        out = np.zeros(len(pts), dtype=bool)
+        dom = spec.domain_mask(pts)
+        if dom.any():
+            inner = spec.coords(pts[dom])[:, len(spec.outer_axes):]
+            out[np.flatnonzero(dom)] = self.owned[k][tuple(inner.T)]
+        return out
+
     @property
     def stored_elems(self) -> int:
         """Total slots the irredundant layout stores (each value once)."""

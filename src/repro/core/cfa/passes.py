@@ -118,6 +118,9 @@ class CompileState:
     pipeline: Any = None  # CFAPipeline
     compiled: Any = None  # CompiledStencil
     distributed: bool = False
+    # analysis passes (repro.core.cfa.analysis) append Diagnostic records
+    # here; lowering passes never touch it
+    diagnostics: tuple = ()
     # bookkeeping (excluded from trace diffs): the running pipeline's
     # fingerprint (seeded by PassPipeline.run) and the accreted trace
     pass_fingerprint: tuple = dataclasses.field(default=None, repr=False, compare=False)
@@ -230,6 +233,13 @@ def _summarize(v: Any) -> str:
         return f"{kind}(tile={v.tiling.sizes})"
     if hasattr(v, "executor") and hasattr(v, "layout"):  # a CompiledStencil
         return f"backend {v.backend}, layout {v.layout.key}"
+    if (isinstance(v, tuple) and v
+            and all(hasattr(d, "code") and hasattr(d, "severity") for d in v)):
+        # a Diagnostic tuple (duck-typed: passes must not import analysis)
+        by_sev = {s: sum(1 for d in v if d.severity == s)
+                  for s in ("ERROR", "WARN", "INFO")}
+        head = ", ".join(f"{s}={n}" for s, n in by_sev.items() if n)
+        return f"{len(v)} diagnostic(s): {head}"
     if isinstance(v, tuple):
         return repr(v)
     return kind

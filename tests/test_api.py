@@ -340,6 +340,7 @@ def test_legacy_shims_are_gone():
 # update this list (and the docs) deliberately, or revert the accident.
 PUBLIC_API = [
     "AXI_ZC706",
+    "AnalysisReport",
     "BackendError",
     "BandwidthReport",
     "BlockCodec",
@@ -353,6 +354,7 @@ PUBLIC_API = [
     "CompiledStencil",
     "DEFAULT_PASSES",
     "Deps",
+    "Diagnostic",
     "EXECUTORS",
     "Executor",
     "ExecutorCaps",
@@ -376,6 +378,7 @@ PUBLIC_API = [
     "Tiling",
     "TransferPlan",
     "TransferSample",
+    "VerificationError",
     "autotune",
     "available_backends",
     "build_storage_map",
@@ -397,6 +400,7 @@ PUBLIC_API = [
     "register_target",
     "rehydrate_facets",
     "select_backend",
+    "verify",
 ]
 
 

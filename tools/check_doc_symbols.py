@@ -38,8 +38,8 @@ ROOT = Path(__file__).resolve().parents[1]
 # the public front-end surface checked in reverse (docs must cover it)
 API_MODULE = ROOT / "src" / "repro" / "cfa.py"
 
-DEFAULT_DOCS = ("docs/*.md", "README.md", "benchmarks/results/README.md",
-                "PAPERS.md")
+DEFAULT_DOCS = ("docs/*.md", "docs/analysis.md", "README.md",
+                "benchmarks/results/README.md", "PAPERS.md")
 
 # directories whose .py files make up the symbol corpus
 CODE_DIRS = ("src", "benchmarks", "tests", "tools", "examples")
@@ -169,6 +169,7 @@ def main(argv: list[str]) -> int:
         files = []
         for pat in DEFAULT_DOCS:
             files.extend(sorted(ROOT.glob(pat)))
+        files = list(dict.fromkeys(files))  # explicit entries may re-glob
     missing = [f for f in files if not f.is_file()]
     if missing:
         print(f"no such doc file(s): {', '.join(map(str, missing))}")

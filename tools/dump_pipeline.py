@@ -55,6 +55,9 @@ def main(argv=None) -> int:
     ap.add_argument("--budget", type=int, default=32,
                     help="autotune evaluation budget (only with "
                          "--layout autotune)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the static analysis suite and append its "
+                         "AnalysisReport to the JSON trace")
     args = ap.parse_args(argv)
 
     compiled = cfa.compile(
@@ -78,6 +81,9 @@ def main(argv=None) -> int:
             "distributed": compiled.distributed,
         },
     }
+    if args.verify:
+        report = cfa.verify(compiled, raise_on_error=False)
+        out["analysis"] = report.to_dict()
     json.dump(out, sys.stdout, indent=1)
     print()
     return 0
