@@ -110,7 +110,9 @@ def multiport() -> None:
             rows.append(dict(r, model=model.name))
             _csv(f"multiport/{model.name}/{n}ports", r["t_multi_us"],
                  f"speedup={r['speedup']:.2f};balance={r['balance']:.2f}")
-    (RESULTS / "multiport.json").write_text(json.dumps(rows, indent=1))
+    out = RESULTS / "multiport" / "quick.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
 
 
 def autotune_table() -> None:
@@ -137,7 +139,9 @@ def autotune_table() -> None:
         _csv(f"autotune/{name}", 0.0,
              f"winner={d.best.candidate.key};"
              f"eff={d.best.peak_fraction_effective:.3f};gain={gain:.2f}x")
-    (RESULTS / "autotune.json").write_text(json.dumps(rows, indent=1))
+    out = RESULTS / "autotune" / "quick.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
 
 
 def roofline_table() -> None:

@@ -78,6 +78,15 @@ from repro.core.cfa import (
     get_codec,
     # the underlying pipeline (CompiledStencil.pipeline)
     CFAPipeline,
+    # runtime burst telemetry (compile(trace=True),
+    # CompiledStencil.last_trace(), tools/cfa_trace.py)
+    TraceRecorder,
+    Span,
+    Counters,
+    RuntimeReport,
+    runtime_report,
+    chrome_trace,
+    validate_chrome_trace,
     # static verification (compile(verify=True), cfa.verify,
     # CompiledStencil.diagnostics(), tools/cfa_lint.py)
     verify,
@@ -147,6 +156,13 @@ __all__ = [
     "CODECS",
     "get_codec",
     "CFAPipeline",
+    "TraceRecorder",
+    "Span",
+    "Counters",
+    "RuntimeReport",
+    "runtime_report",
+    "chrome_trace",
+    "validate_chrome_trace",
     "verify",
     "Diagnostic",
     "AnalysisReport",

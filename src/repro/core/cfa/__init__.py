@@ -110,6 +110,26 @@ Calibration (``calibrate``) — the measured-vs-modeled verification layer
     * ``measurement_noise`` / ``timing_unusable_reason`` — the host noise
       probe behind the timing tests' skip-with-reason fixture.
 
+Runtime telemetry (``obs``) — what each wave, facet and port *actually*
+did, as an inspectable timeline (the runtime counterpart of the CFA1xx
+static verifier; Iris argues layout decisions must be justified by
+observed utilization)
+    * ``TraceRecorder`` / ``Span`` / ``Counters`` — structured spans
+      (copy_in / execute_tile / copy_out / halo_resolve per tile, grouped
+      by wave and port; the dataflow executor's prefetch/compute/commit
+      as concurrent lanes) + deterministic counters that
+      ``TraceRecorder.reconcile`` checks exactly against the per-tile
+      ``TransferPlan`` accounting and ``BurstModel.plan_bytes``.
+    * ``chrome_trace`` / ``validate_chrome_trace`` — Chrome trace-event
+      JSON export (Perfetto-loadable; ``tools/cfa_trace.py`` is the CLI)
+      and its schema check (``docs/tracing.md``).
+    * ``RuntimeReport`` / ``runtime_report`` — measured-vs-modeled
+      attribution per plan/port/facet, worst-offender ranked with the
+      CFA3xx fixit vocabulary.
+    * Enabled per compile via ``compile(..., trace=True)`` /
+      ``REPRO_TRACE=1``; read back with ``CompiledStencil.last_trace()``
+      (``PassTrace`` compile spans fold into the same timeline).
+
 Lowering passes (``passes``) — ``compile`` as a staged compiler flow
     * ``CompileState``    — the immutable lowering artifact (request fields
       refined in place, artifacts accreted per stage).
@@ -240,6 +260,15 @@ from .calibrate import (
     measurement_noise,
     timing_unusable_reason,
 )
+from .obs import (
+    Span,
+    Counters,
+    TraceRecorder,
+    RuntimeReport,
+    runtime_report,
+    chrome_trace,
+    validate_chrome_trace,
+)
 from .transform import CFAPipeline
 from .passes import (
     CompileState,
@@ -308,6 +337,8 @@ __all__ = [
     "TransferSample", "CalibratedModel", "Calibration", "CalibrationError",
     "measure_runs", "measure_plan", "fit_burst_model", "calibrate",
     "measurement_noise", "timing_unusable_reason",
+    "Span", "Counters", "TraceRecorder", "RuntimeReport", "runtime_report",
+    "chrome_trace", "validate_chrome_trace",
     "CFAPipeline",
     "CompileState", "Pass", "PassPipeline", "PassTrace", "PipelineError",
     "DEFAULT_PASSES", "default_pipeline", "default_pass_fingerprint",

@@ -161,6 +161,11 @@ class CompiledStencil:
     # lowering ran without the analysis passes (diagnostics() then runs
     # the suite on demand)
     analysis: object = dataclasses.field(default=None, repr=False, compare=False)
+    # compile(..., trace=True): every __call__ records a runtime trace
+    trace_enabled: bool = dataclasses.field(default=False, repr=False, compare=False)
+    # mutable holder for the most recent run's TraceRecorder (the stencil
+    # itself is frozen); read it via last_trace()
+    _trace_holder: list = dataclasses.field(default_factory=list, repr=False, compare=False)
 
     @property
     def backend(self) -> str:
@@ -191,16 +196,69 @@ class CompiledStencil:
         return getattr(self.pipeline, "storage_map", None)
 
     def __call__(self, inputs: jnp.ndarray, *, dtype=jnp.float32,
+                 trace: bool | None = None,
                  **opts) -> dict[int, jnp.ndarray]:
         """Run the stencil: live-in planes (w0, N1, ..) → facet storage.
 
         ``opts`` pass through to the backend (e.g. ``interpret=False`` for
         the Pallas kernels on a real TPU, ``use_kernel=True`` /
-        ``mesh=...`` for the sharded backend)."""
-        return self.executor.execute(
-            self.pipeline, jnp.asarray(inputs),
-            dtype=dtype, n_ports=self.n_ports, **opts,
+        ``mesh=...`` for the sharded backend).
+
+        ``trace`` overrides the compile-time ``trace=`` knob for this run:
+        ``True`` records a runtime :class:`~repro.core.cfa.obs.
+        TraceRecorder` (spans + counters; read it via :meth:`last_trace`),
+        ``False`` forces tracing off, ``None`` (default) follows the
+        compile.  With tracing off no recorder is allocated — the
+        executors pay one ``is None`` check per phase."""
+        if trace is None:
+            trace = self.trace_enabled
+        if not trace:
+            return self.executor.execute(
+                self.pipeline, jnp.asarray(inputs),
+                dtype=dtype, n_ports=self.n_ports, **opts,
+            )
+        from . import obs
+
+        rec = obs.TraceRecorder(
+            model=self.target.model,
+            label=f"{self.program.name}@{'x'.join(map(str, self.space.sizes))}"
+                  f"/{self.backend}",
         )
+        rec.meta.update(backend=self.backend, storage=self.storage,
+                        n_ports=self.n_ports, layout=self.layout.key)
+        rec.add_pass_traces(self.lowering)
+        prev = self.pipeline.recorder
+        self.pipeline.recorder = rec
+        try:
+            out = self.executor.execute(
+                self.pipeline, jnp.asarray(inputs),
+                dtype=dtype, n_ports=self.n_ports, **opts,
+            )
+        finally:
+            self.pipeline.recorder = prev
+            self._trace_holder[:] = [rec]
+        export_dir = obs.trace_export_dir()
+        if export_dir is not None:
+            rec.save_chrome(export_dir / f"{rec.label.replace('/', '_')}.json")
+        return out
+
+    def last_trace(self):
+        """The :class:`~repro.core.cfa.obs.TraceRecorder` of the most
+        recent traced run (compile spans folded in), or ``None`` when no
+        traced run has happened yet."""
+        return self._trace_holder[-1] if self._trace_holder else None
+
+    def runtime_report(self, **kwargs):
+        """Measured-vs-modeled attribution of this stencil's interior-tile
+        plan (:func:`repro.core.cfa.obs.runtime_report`): per-facet /
+        per-port observed time vs ``BurstModel.time``, ranked worst
+        deviation first, each row carrying the static lint's fixit."""
+        from .obs import runtime_report as _rr
+
+        kwargs.setdefault("n_ports", self.n_ports)
+        kwargs.setdefault("contiguity", self.layout.contiguity)
+        kwargs.setdefault("overlap", self.executor.caps.overlap)
+        return _rr(self.plan, self.target.model, **kwargs)
 
     @functools.cached_property
     def plan(self) -> TransferPlan:
@@ -320,6 +378,7 @@ def compile(
     halo_quantize: bool = False,
     passes: PassPipeline | None = None,
     verify: bool = False,
+    trace: bool | None = None,
 ) -> CompiledStencil:
     """Compile ``program`` on ``space`` into an executable stencil.
 
@@ -372,6 +431,14 @@ def compile(
       passes; any ERROR diagnostic raises :class:`~repro.core.cfa.
       analysis.VerificationError`, and the full report is surfaced as
       ``compiled.diagnostics()``.
+    * ``trace`` — record a runtime :class:`~repro.core.cfa.obs.
+      TraceRecorder` on every ``compiled(...)`` call (spans per tile
+      phase, burst/byte counters, the lowering's :class:`PassTrace`
+      stages folded into the same timeline); read it back via
+      ``compiled.last_trace()`` and export Chrome trace JSON with
+      ``tools/cfa_trace.py``.  Default ``None`` follows the
+      ``REPRO_TRACE`` environment knob; tracing off allocates nothing on
+      the hot path.
     """
     state = CompileState(
         program=program, space=space, target=target, n_ports=n_ports,
@@ -391,7 +458,12 @@ def compile(
             f"pipeline {pipe.names} completed without producing a "
             f"CompiledStencil"
         )
-    compiled = dataclasses.replace(final.compiled, lowering=final.trace)
+    if trace is None:
+        from .obs import trace_enabled_by_env
+
+        trace = trace_enabled_by_env()
+    compiled = dataclasses.replace(final.compiled, lowering=final.trace,
+                                   trace_enabled=bool(trace))
     if verify:
         report = _analysis.AnalysisReport(
             tuple(final.diagnostics),

@@ -44,6 +44,15 @@ pytest fixture in ``tests/conftest.py``) can *skip with a reason* instead
 of flaking.  ``REPRO_TIMING_TESTS=skip|force`` overrides the probe, and
 ``REPRO_MEASURE_WARMUP`` / ``REPRO_MEASURE_REPEATS`` override the default
 measurement fidelity everywhere.
+
+The wall-clock itself — :func:`~repro.core.cfa.obs.now`, the compute
+stand-in :func:`~repro.core.cfa.obs.burn`, the fidelity knobs and the
+noise probe — lives in :mod:`repro.core.cfa.obs` (one home for every
+measurement-fidelity decision); this module re-exports the probe under
+its historical names and adds the burst-schedule harness on top.  Pass
+``recorder=`` (a :class:`~repro.core.cfa.obs.TraceRecorder`) to
+:func:`measure_runs` / :func:`measure_plan` and every timed pass is
+emitted as a ``measure``-category span on the shared timeline.
 """
 from __future__ import annotations
 
@@ -51,9 +60,7 @@ import dataclasses
 import functools
 import json
 import math
-import os
 import statistics
-import time
 from pathlib import Path
 from typing import Sequence
 
@@ -62,6 +69,9 @@ import numpy as np
 from .bandwidth import AXI_ZC706, BurstModel, PortedPlan
 from .compress import get_codec, stored_bits
 from .multiport import best_repartition
+from .obs import (TraceRecorder, _timing_probe, burn as _burn,
+                  measure_defaults as _measure_defaults,
+                  measurement_noise, now, timing_unusable_reason)
 from .plans import TransferPlan, cfa_plan, interior_tile
 from .spaces import IterSpace, Tiling
 
@@ -112,23 +122,6 @@ def _wire_words(length: int, elem_bytes: int, codec_bits: int | None) -> int:
 # The measurement harness
 # --------------------------------------------------------------------------
 
-_DEF_WARMUP = 1
-_DEF_REPEATS = 5
-
-
-def _measure_defaults(warmup: int | None, repeats: int | None) -> tuple[int, int]:
-    """Resolve warmup/median-of-k, honouring the env-var escape hatches."""
-    if warmup is None:
-        warmup = int(os.environ.get("REPRO_MEASURE_WARMUP", _DEF_WARMUP))
-    if repeats is None:
-        repeats = int(os.environ.get("REPRO_MEASURE_REPEATS", _DEF_REPEATS))
-    if warmup < 0:
-        raise ValueError(f"warmup must be >= 0: {warmup}")
-    if repeats < 1:
-        raise ValueError(f"repeats must be >= 1: {repeats}")
-    return warmup, repeats
-
-
 @functools.lru_cache(maxsize=1)
 def _copy_op():
     """One jitted elementwise copy, re-specialised per buffer shape by jax."""
@@ -145,25 +138,6 @@ def _wire_buffer(n_words: int):
     return jnp.zeros((int(n_words),), jnp.float32)
 
 
-def _burn(seconds: float) -> None:
-    """Occupy ``seconds`` of wall-clock — the stand-in for tile compute.
-
-    Models a *dedicated* compute engine (Fig. 13 DATAFLOW: compute does not
-    contend with the DMA engine for resources): the bulk is slept, so the
-    host cores stay free for the in-flight copy threads, and only a short
-    tail is spun for timer precision.  A pure busy-spin would steal cores
-    from the copy engine — on a CPU-hosted jax "device" that *slows the
-    transfers down* and the overlapped schedule would (wrongly) measure
-    slower than the sequential one.  Either way the time cannot be elided
-    by the device queue."""
-    if seconds <= 0.0:
-        return
-    end = time.perf_counter() + seconds
-    while (remaining := end - time.perf_counter()) > 0.0:
-        if remaining > 5e-4:
-            time.sleep(remaining - 2e-4)
-
-
 def measure_runs(
     runs: Sequence[int],
     elem_bytes: int = 8,
@@ -173,6 +147,8 @@ def measure_runs(
     repeats: int | None = None,
     compute_s: float = 0.0,
     overlap: bool = False,
+    recorder: TraceRecorder | None = None,
+    label: str = "",
 ) -> float:
     """Measured wall-clock seconds to transfer one burst schedule.
 
@@ -191,6 +167,12 @@ def measure_runs(
     the compute spins while they are in flight, and the pass blocks at the
     end — wall-clock ≈ max(transfer, compute), the Fig. 13 DATAFLOW
     schedule.
+
+    With ``recorder`` (a :class:`~repro.core.cfa.obs.TraceRecorder`)
+    every timed pass is emitted as a ``measure_pass`` span (category
+    ``measure``, one ``measure`` summary span per schedule) carrying the
+    schedule's burst count and wire bytes — the measurement layer on the
+    same timeline as the executors.
     """
     warmup, repeats = _measure_defaults(warmup, repeats)
     if compute_s < 0.0:
@@ -205,23 +187,44 @@ def measure_runs(
 
     if overlap:
         def one_pass() -> float:
-            t0 = time.perf_counter()
+            t0 = now()
             futs = [copy(b) for b in bufs]  # async dispatch: copies in flight
             _burn(compute_s)
             for f in futs:
                 f.block_until_ready()
-            return time.perf_counter() - t0
+            return now() - t0
     else:
         def one_pass() -> float:
-            t0 = time.perf_counter()
+            t0 = now()
             for b in bufs:
                 copy(b).block_until_ready()
             _burn(compute_s)
-            return time.perf_counter() - t0
+            return now() - t0
 
     for _ in range(warmup):
         one_pass()
-    return statistics.median(one_pass() for _ in range(repeats))
+    if recorder is None:
+        return statistics.median(one_pass() for _ in range(repeats))
+
+    track = f"measure/{label}" if label else "measure"
+    bytes_total = sum(wire_bytes(r, elem_bytes, codec_bits) for r in runs)
+    t_sched = now()
+    times = []
+    for i in range(repeats):
+        t0 = now()
+        times.append(one_pass())
+        recorder.add_span("measure_pass", t0, t0 + times[-1], track=track,
+                          cat="measure", label=label, n_bursts=len(runs),
+                          wire_bytes=bytes_total, overlap=overlap,
+                          compute_s=compute_s, index=i)
+    med = statistics.median(times)
+    recorder.add_span("measure", t_sched, now(), track=track, cat="measure",
+                      label=label, n_bursts=len(runs),
+                      wire_bytes=bytes_total, repeats=repeats,
+                      warmup=warmup, median_s=med)
+    recorder.counters.add("measure_passes", repeats)
+    recorder.counters.add("measure_schedules", 1)
+    return med
 
 
 def measure_plan(
@@ -232,6 +235,8 @@ def measure_plan(
     repeats: int | None = None,
     compute_s: float = 0.0,
     overlap: bool = False,
+    recorder: TraceRecorder | None = None,
+    label: str = "",
 ) -> float:
     """Measured wall-clock seconds for a whole plan under ``model``'s
     element width — the measured counterpart of :meth:`BurstModel.time`.
@@ -242,18 +247,24 @@ def measure_plan(
     the same §VII semantics the analytic model uses).  ``compute_s`` /
     ``overlap`` time the tile's compute alongside the schedule (each
     port's schedule overlaps the same compute term; the tile still waits
-    for the slowest port) — see :func:`measure_runs`.
+    for the slowest port) — see :func:`measure_runs`.  ``recorder``
+    forwards to :func:`measure_runs` (per-port schedules get
+    ``{label}/port{p}`` span labels).
     """
     cb = getattr(plan, "codec_bits", None)
+    label = label or f"plan:{getattr(plan, 'scheme', '?')}"
     kw = dict(codec_bits=cb, warmup=warmup, repeats=repeats,
-              compute_s=compute_s, overlap=overlap)
+              compute_s=compute_s, overlap=overlap, recorder=recorder)
     if isinstance(plan, PortedPlan):
         return max(
-            measure_runs(rr + wr, model.elem_bytes, **kw)
-            for rr, wr in zip(plan.read_runs_by_port, plan.write_runs_by_port,
-                              strict=True)
+            measure_runs(rr + wr, model.elem_bytes,
+                         label=f"{label}/port{p}", **kw)
+            for p, (rr, wr) in enumerate(zip(plan.read_runs_by_port,
+                                             plan.write_runs_by_port,
+                                             strict=True))
         )
-    return measure_runs(plan.read_runs + plan.write_runs, model.elem_bytes, **kw)
+    return measure_runs(plan.read_runs + plan.write_runs, model.elem_bytes,
+                        label=label, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -414,57 +425,6 @@ class CalibratedModel(BurstModel):
         # unchanged to calibrated models
         t = super().transfer_time_s(plan)
         return t * self.port_factor(getattr(plan, "n_ports", 1))
-
-
-# --------------------------------------------------------------------------
-# Noise probe (the skip-with-reason hook for timing tests)
-# --------------------------------------------------------------------------
-
-_PROBE_SCHEDULE = (4096,) * 8
-_MAX_NOISE = 0.75  # relative spread beyond which timing tests must skip
-
-
-@functools.lru_cache(maxsize=1)
-def _timing_probe() -> tuple[str | None, float]:
-    """(why timing is unusable here | None, measured relative noise).
-
-    Mirrors the ``multidevice_emulation_reason`` pattern in
-    ``tests/conftest.py``: probe once, cache, let tests skip with the
-    reason.  ``REPRO_TIMING_TESTS=skip`` forces the skip (CI escape hatch
-    for known-noisy runners); ``=force`` trusts the host unconditionally.
-    """
-    override = os.environ.get("REPRO_TIMING_TESTS", "").strip().lower()
-    if override in ("force", "run", "1"):
-        return None, 0.0
-    if override in ("skip", "0"):
-        return "REPRO_TIMING_TESTS=skip set in the environment", 1.0
-    res = time.get_clock_info("perf_counter").resolution
-    if res > 1e-4:
-        return f"perf_counter resolution too coarse ({res:.1e} s)", 1.0
-    try:
-        ts = [measure_runs(_PROBE_SCHEDULE, 8, warmup=1, repeats=3)
-              for _ in range(2)]
-    except Exception as e:  # no usable jax device, OOM, ...
-        return f"measurement harness failed to run ({e!r})", 1.0
-    lo = min(ts)
-    if lo <= 0.0:
-        return "reference schedule measured as zero time", 1.0
-    spread = (max(ts) - lo) / lo
-    if spread > _MAX_NOISE:
-        return (f"host timing too noisy (reference schedule spread "
-                f"{spread:.0%} > {_MAX_NOISE:.0%})"), spread
-    return None, spread
-
-
-def timing_unusable_reason() -> str | None:
-    """None when wall-clock measurement is trustworthy here, else why not."""
-    return _timing_probe()[0]
-
-
-def measurement_noise() -> float:
-    """Relative spread of the reference schedule on this host (probe-cached);
-    timing tests scale their tolerances by it."""
-    return _timing_probe()[1]
 
 
 # --------------------------------------------------------------------------

@@ -65,6 +65,10 @@ class CFAPipeline:
     # repro.distributed.compression (lossy halo traffic, the distribute
     # pass's compression knob; False keeps results bit-exact)
     halo_quantize: bool = False
+    # runtime telemetry (repro.core.cfa.obs.TraceRecorder); None = tracing
+    # off, and the executors pay exactly one `is None` check per phase —
+    # no recorder or span allocation on the hot path
+    recorder: object | None = dataclasses.field(default=None, repr=False, compare=False)
     specs: Mapping[int, FacetSpec] = dataclasses.field(init=False)
     num_tiles: tuple[int, ...] = dataclasses.field(init=False)
 
@@ -209,7 +213,14 @@ class CFAPipeline:
         back as a fresh, uncommitted array.  Single-device facets (the
         ``sweep``/``sweep_wavefront`` hot path) keep the all-on-device path.
         """
+        rec = self.recorder
+        t_start = rec.now() if rec is not None else 0.0
         maps, lo, w = self._halo_maps(tile)
+        if rec is not None:
+            rec.add_span("halo_resolve", t_start, rec.now(),
+                         track=rec.track("fetch"), tile=list(tile),
+                         wave=int(sum(tile)), port=rec.port,
+                         **rec.record_halo(self, maps))
         t = np.array(self.tiling.sizes)
         pieces = []
         for key, pts in maps.items():
@@ -241,10 +252,15 @@ class CFAPipeline:
             H = np.zeros(tuple(w + t), dtype=np.dtype(facets[0].dtype))
             for local, vals in pieces:
                 H[tuple(local.T)] = np.asarray(vals)
-            return jnp.asarray(H)
-        H = jnp.zeros(tuple(w + t), facets[0].dtype)
-        for local, vals in pieces:
-            H = H.at[tuple(jnp.asarray(local.T))].set(vals)
+            H = jnp.asarray(H)
+        else:
+            H = jnp.zeros(tuple(w + t), facets[0].dtype)
+            for local, vals in pieces:
+                H = H.at[tuple(jnp.asarray(local.T))].set(vals)
+        if rec is not None:
+            rec.add_span("copy_in", t_start, rec.now(),
+                         track=rec.track("fetch"),
+                         **rec.record_read(self, tile))
         return H
 
     def _gather_virtual(self, f0, spec: FacetSpec, pts: np.ndarray):
@@ -296,6 +312,8 @@ class CFAPipeline:
     def copy_out(
         self, facets: dict[int, jnp.ndarray], tile: tuple[int, ...], H: jnp.ndarray
     ) -> dict[int, jnp.ndarray]:
+        rec = self.recorder
+        t_start = rec.now() if rec is not None else 0.0
         w = self.widths
         t = self.tiling.sizes
         interior = H[self._interior_slices(w)]
@@ -304,6 +322,10 @@ class CFAPipeline:
             sl = [slice(None)] * self.space.ndim
             sl[k] = slice(t[k] - spec.width, t[k])
             out[k] = self._store_block(out[k], spec, tile, interior[tuple(sl)])
+        if rec is not None:
+            rec.add_span("copy_out", t_start, rec.now(),
+                         track=rec.track("commit"),
+                         **rec.record_write(self, tile))
         return out
 
     # -- full sweep ----------------------------------------------------------------
@@ -311,11 +333,19 @@ class CFAPipeline:
     def _sweep(self, inputs: jnp.ndarray, dtype=jnp.float32) -> dict[int, jnp.ndarray]:
         """Run the whole tiled computation through facet storage (the
         ``backend="sweep"`` executor's entry point)."""
+        rec = self.recorder
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
+        if rec is not None:
+            rec.counters.add("waves", len(self.wavefronts()))
         for tile in itertools.product(*(range(n) for n in self.num_tiles)):
             H = self.copy_in(facets, tile)
-            H = self.execute_tile(H)
+            if rec is None:
+                H = self.execute_tile(H)
+            else:
+                with rec.span("execute_tile", track=rec.track("compute"),
+                              tile=list(tile), wave=int(sum(tile))):
+                    H = self.execute_tile(H)
             facets = self.copy_out(facets, tile, H)
         return facets
 
@@ -339,11 +369,19 @@ class CFAPipeline:
         """Wavefront-parallel sweep: each wave's tiles execute as one batch
         (through the Pallas tile executor when ``use_kernel``) — the
         ``backend="wavefront"``/``"pallas"`` executors' entry point."""
+        rec = self.recorder
         facets = self.init_facets(dtype)
         facets = self.load_inputs(facets, inputs.astype(dtype))
         interior = self._interior_slices(self.widths)
-        for wave in self.wavefronts():
+        waves = self.wavefronts()
+        if rec is not None:
+            rec.counters.add("waves", len(waves))
+        for wave in waves:
             halos = jnp.stack([self.copy_in(facets, t) for t in wave])
+            tok = rec.begin("execute_wave", track=rec.track("compute"),
+                            wave=int(sum(wave[0])), n_tiles=len(wave),
+                            tiles=[list(t) for t in wave],
+                            ) if rec is not None else None
             if use_kernel:
                 from repro.kernels.stencil import execute_tiles
 
@@ -356,6 +394,8 @@ class CFAPipeline:
                     outs.append(H)
             else:
                 outs = [self.execute_tile(halos[i]) for i in range(len(wave))]
+            if tok is not None:
+                rec.end(tok)
             for tile, H in zip(wave, outs):
                 facets = self.copy_out(facets, tile, H)
         return facets
@@ -409,17 +449,33 @@ class CFAPipeline:
                     H = stage(H)
                 return self.execute_tile(H)
 
-        for wave in self.wavefronts():
+        rec = self.recorder
+        waves = self.wavefronts()
+        if rec is not None:
+            rec.counters.add("waves", len(waves))
+        for wave in waves:
             nxt = self.copy_in(facets, wave[0])
             prev_tile: tuple[int, ...] | None = None
             prev_out = None
+            prev_tok: int | None = None
             for j, tile in enumerate(wave):
+                # the compute span brackets the whole in-flight window:
+                # dispatch here, closed when this tile's commit begins —
+                # so the next tile's prefetch (and the previous tile's
+                # commit) land *inside* it as concurrent lanes
+                tok = rec.begin("execute_tile", track=rec.track("compute"),
+                                tile=list(tile), wave=int(sum(tile)),
+                                port=rec.port) if rec is not None else None
                 H = _dispatch(nxt)  # async: compute in flight from here on
                 if j + 1 < len(wave):
                     nxt = self.copy_in(facets, wave[j + 1])  # prefetch
                 if prev_tile is not None:
+                    if prev_tok is not None:
+                        rec.end(prev_tok)
                     facets = self.copy_out(facets, prev_tile, prev_out)
-                prev_tile, prev_out = tile, H
+                prev_tile, prev_out, prev_tok = tile, H, tok
+            if prev_tok is not None:
+                rec.end(prev_tok)
             facets = self.copy_out(facets, prev_tile, prev_out)
         return facets
 
@@ -502,17 +558,34 @@ class CFAPipeline:
             )(halos)
 
         batch_sharding = NamedSharding(mesh, P(axis))
-        for wave in self.wavefronts():
-            halos = jnp.stack([self.copy_in(facets, t) for t in wave])
+        rec = self.recorder
+        waves = self.wavefronts()
+        if rec is not None:
+            rec.counters.add("waves", len(waves))
+        for wave in waves:
             # pad the wave to a multiple of the mesh axis by repeating tiles
             # (a wave can be smaller than the axis — e.g. the first wave is
             # always one tile — so slicing the batch itself cannot under-pad)
             target = -(-len(wave) // n_shards) * n_shards
+            gathered = []
+            for i, t in enumerate(wave):
+                if rec is not None:
+                    # tile i runs on shard i of the padded batch — group its
+                    # spans under that port's lanes
+                    rec.port = i * n_shards // target
+                gathered.append(self.copy_in(facets, t))
+            halos = jnp.stack(gathered)
+            if rec is not None:
+                rec.port = 0
             if target != len(wave):
                 reps = -(-target // len(wave))
                 halos = jnp.concatenate([halos] * reps, axis=0)[:target]
             # commit the batch to the port mesh: one shard of tiles per port
             halos = jax.device_put(halos, batch_sharding)
+            tok = rec.begin("execute_wave", track=rec.track("compute"),
+                            wave=int(sum(wave[0])), n_tiles=len(wave),
+                            n_ports=n_shards,
+                            ) if rec is not None else None
             if use_kernel:
                 from repro.kernels.stencil import execute_tiles_sharded
 
@@ -525,8 +598,14 @@ class CFAPipeline:
             # pull the executed planes back uncommitted so copy_out's facet
             # updates stay resident on each facet's own port device
             outs = np.asarray(jax.device_get(outs))
+            if tok is not None:
+                rec.end(tok)
             for i, tile in enumerate(wave):
+                if rec is not None:
+                    rec.port = i * n_shards // target
                 facets = self.copy_out(facets, tile, jnp.asarray(outs[i]))
+            if rec is not None:
+                rec.port = 0
         return facets
 
     # -- oracle ----------------------------------------------------------------

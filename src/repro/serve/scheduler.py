@@ -23,10 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cfa.obs import TraceRecorder, now
 from repro.models.config import ArchConfig
 from repro.models.lm import init_caches, lm_decode, lm_prefill
 
 __all__ = ["Request", "ContinuousBatcher"]
+
+_TRACK = "serve/sched"  # single scheduler lane in the trace timeline
 
 
 @dataclasses.dataclass
@@ -40,17 +43,22 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, cfg: ArchConfig, params, *, lanes: int, max_seq: int,
-                 eos: int | None = None):
+                 eos: int | None = None,
+                 recorder: TraceRecorder | None = None):
         self.cfg = cfg
         self.params = params
         self.lanes = lanes
         self.max_seq = max_seq
         self.eos = eos
+        self.recorder = recorder
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * lanes
         self.positions = np.zeros(lanes, np.int32)  # next write index per lane
         self.caches = init_caches(cfg, lanes, max_seq, 0)
         self.last_tok = np.zeros(lanes, np.int32)
+        self.ticks = 0
+        self.tokens = 0
+        self._elapsed_s = 0.0
 
         self._prefill1 = jax.jit(
             lambda p, t: lm_prefill(p, t, cfg, max_seq=max_seq))
@@ -63,10 +71,12 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def _admit(self) -> None:
+        rec = self.recorder
         for lane in range(self.lanes):
             if self.active[lane] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
+            t0 = now() if rec is not None else 0.0
             logits, c1 = self._prefill1(self.params, jnp.asarray(req.prompt)[None])
             # splice the single-request cache into this lane's batch row
             self.caches = jax.tree.map(
@@ -77,7 +87,22 @@ class ContinuousBatcher:
             self.active[lane] = req
             self.positions[lane] = len(req.prompt)
             self.last_tok[lane] = tok
+            if rec is not None:
+                rec.add_span("admit", t0, now(), track=_TRACK, cat="serve",
+                             rid=req.rid, lane=lane,
+                             prompt_len=len(req.prompt))
+                rec.counters.add("serve_admitted", 1)
             self._maybe_retire(lane)
+
+    def _retire(self, lane: int) -> None:
+        req = self.active[lane]
+        req.done = True
+        self.active[lane] = None
+        rec = self.recorder
+        if rec is not None:
+            rec.instant("retire", track=_TRACK, cat="serve",
+                        rid=req.rid, lane=lane, n_out=len(req.out))
+            rec.counters.add("serve_retired", 1)
 
     def _maybe_retire(self, lane: int) -> None:
         req = self.active[lane]
@@ -85,34 +110,55 @@ class ContinuousBatcher:
             return
         if len(req.out) >= req.max_new or (
                 self.eos is not None and req.out and req.out[-1] == self.eos):
-            req.done = True
-            self.active[lane] = None
+            self._retire(lane)
 
     # ------------------------------------------------------------------
 
     def step(self) -> int:
         """Admit, run one decode tick over all lanes, retire. Returns the
         number of active lanes that produced a token."""
+        rec = self.recorder
+        t0 = now()
         self._admit()
         live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return 0
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.last_tok),
-            jnp.asarray(self.positions))
-        toks = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], -1),
-                          np.int32)
-        for lane in live:
-            req = self.active[lane]
-            req.out.append(int(toks[lane]))
-            self.positions[lane] += 1
-            self.last_tok[lane] = toks[lane]
-            if self.positions[lane] >= self.max_seq - 1:
-                req.done = True
-                self.active[lane] = None
-            else:
-                self._maybe_retire(lane)
+        if live:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.last_tok),
+                jnp.asarray(self.positions))
+            toks = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab], -1),
+                              np.int32)
+            for lane in live:
+                req = self.active[lane]
+                req.out.append(int(toks[lane]))
+                self.positions[lane] += 1
+                self.last_tok[lane] = toks[lane]
+                if self.positions[lane] >= self.max_seq - 1:
+                    self._retire(lane)
+                else:
+                    self._maybe_retire(lane)
+        self.ticks += 1
+        self.tokens += len(live)
+        self._elapsed_s += now() - t0
+        if rec is not None:
+            rec.add_span("step", t0, now(), track=_TRACK, cat="serve",
+                         tick=self.ticks, occupancy=len(live),
+                         queue_depth=len(self.queue))
+            rec.counter_event("occupancy", len(live))
+            rec.counters.add("serve_ticks", 1)
+            rec.counters.add("serve_tokens", len(live))
         return len(live)
+
+    def stats(self) -> dict:
+        """Tick accounting: decode throughput and current load."""
+        return {
+            "ticks": self.ticks,
+            "tokens": self.tokens,
+            "elapsed_s": self._elapsed_s,
+            "tokens_per_sec": (self.tokens / self._elapsed_s
+                               if self._elapsed_s > 0 else 0.0),
+            "occupancy": sum(r is not None for r in self.active) / self.lanes,
+            "queue_depth": len(self.queue),
+        }
 
     def run(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):

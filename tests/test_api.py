@@ -352,6 +352,7 @@ PUBLIC_API = [
     "Calibration",
     "CompileState",
     "CompiledStencil",
+    "Counters",
     "DEFAULT_PASSES",
     "Deps",
     "Diagnostic",
@@ -367,15 +368,18 @@ PUBLIC_API = [
     "PassTrace",
     "PipelineError",
     "PortedPlan",
+    "RuntimeReport",
     "SCORE_MODES",
     "STORAGE_MODES",
     "ScoredLayout",
+    "Span",
     "StencilProgram",
     "StorageMap",
     "TARGETS",
     "TPU_V5E_HBM",
     "Target",
     "Tiling",
+    "TraceRecorder",
     "TransferPlan",
     "TransferSample",
     "VerificationError",
@@ -383,6 +387,7 @@ PUBLIC_API = [
     "available_backends",
     "build_storage_map",
     "calibrate",
+    "chrome_trace",
     "compile",
     "dedup_facets",
     "default_pass_fingerprint",
@@ -399,7 +404,9 @@ PUBLIC_API = [
     "register_executor",
     "register_target",
     "rehydrate_facets",
+    "runtime_report",
     "select_backend",
+    "validate_chrome_trace",
     "verify",
 ]
 

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core.cfa.obs import TraceRecorder, validate_chrome_trace
 from repro.models.lm import init_lm, lm_decode, lm_prefill
 from repro.serve.scheduler import ContinuousBatcher, Request
 
@@ -58,3 +59,91 @@ def test_continuous_batching_matches_single_request(arch):
         assert r.done and len(r.out) == k
         want = _greedy_reference(cfg, params, p, k, 32)
         assert r.out == want, (r.rid, r.out, want)
+
+
+# ---------------------------------------------------------------------------
+# Tick accounting + serve spans (a synthetic request stream through 2 lanes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def _smoke_lm():
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _drained_batcher(cfg, params, *, recorder=None, lanes=2):
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 6, 5, 3)]
+    n_new = [3, 2, 4, 2]
+    cb = ContinuousBatcher(cfg, params, lanes=lanes, max_seq=32,
+                           recorder=recorder)
+    reqs = [Request(i, p, k) for i, (p, k) in enumerate(zip(prompts, n_new))]
+    for r in reqs:
+        cb.submit(r)
+    cb.run()
+    return cb, reqs
+
+
+def test_tick_accounting_totals(_smoke_lm):
+    """stats() counts exactly the tokens decode ticks produced (admission
+    emits the first token outside of step's live count)."""
+    cfg, params = _smoke_lm
+    cb, reqs = _drained_batcher(cfg, params)
+    st = cb.stats()
+    total_out = sum(len(r.out) for r in reqs)
+    # each request's first token comes from prefill-at-admit, the rest
+    # from decode ticks
+    assert st["tokens"] == total_out - len(reqs)
+    assert st["ticks"] >= max(k - 1 for k in (3, 2, 4, 2))
+    assert st["tokens_per_sec"] > 0.0
+    assert st["occupancy"] == 0.0 and st["queue_depth"] == 0
+
+
+def test_serve_spans_and_counters(_smoke_lm):
+    """admit/retire/step spans land on the serve track and the counters
+    reconcile with the request stream."""
+    cfg, params = _smoke_lm
+    rec = TraceRecorder(label="serve-test")
+    cb, reqs = _drained_batcher(cfg, params, recorder=rec)
+
+    admits = rec.find("admit", cat="serve")
+    retires = rec.find("retire", cat="serve")
+    steps = rec.find("step", cat="serve")
+    assert len(admits) == len(reqs) == rec.counters["serve_admitted"]
+    assert len(retires) == len(reqs) == rec.counters["serve_retired"]
+    assert {s.arg("rid") for s in admits} == {r.rid for r in reqs}
+    assert {s.arg("rid") for s in retires} == {r.rid for r in reqs}
+    assert len(steps) == cb.ticks == rec.counters["serve_ticks"]
+    assert rec.counters["serve_tokens"] == cb.tokens
+    # per-step occupancy never exceeds the lane count and sums to tokens
+    occ = [s.arg("occupancy") for s in steps]
+    assert all(0 <= o <= cb.lanes for o in occ)
+    assert sum(occ) == cb.tokens
+    # occupancy counter samples mirror the step spans
+    assert [v for _, n, v in rec.counter_samples if n == "occupancy"] == occ
+    validate_chrome_trace(rec.to_chrome())
+
+
+def test_admit_retire_ordering(_smoke_lm):
+    """A lane's retire precedes the admit that reuses it; FIFO admission."""
+    cfg, params = _smoke_lm
+    rec = TraceRecorder(label="serve-order")
+    _drained_batcher(cfg, params, recorder=rec)
+    events = [s for s in rec.spans
+              if s.cat == "serve" and s.name in ("admit", "retire")]
+    # spans are appended in wall order; replay them per lane
+    busy: dict[int, int] = {}
+    admit_rids = []
+    for s in events:
+        lane = s.arg("lane")
+        if s.name == "admit":
+            assert lane not in busy, (lane, busy)
+            busy[lane] = s.arg("rid")
+            admit_rids.append(s.arg("rid"))
+        else:
+            assert busy.pop(lane) == s.arg("rid")
+    assert not busy
+    assert admit_rids == sorted(admit_rids)  # FIFO submit order

@@ -38,7 +38,8 @@ ROOT = Path(__file__).resolve().parents[1]
 # the public front-end surface checked in reverse (docs must cover it)
 API_MODULE = ROOT / "src" / "repro" / "cfa.py"
 
-DEFAULT_DOCS = ("docs/*.md", "docs/analysis.md", "README.md",
+DEFAULT_DOCS = ("docs/*.md", "docs/analysis.md", "docs/tracing.md",
+                "docs/architecture.md", "README.md",
                 "benchmarks/results/README.md", "PAPERS.md")
 
 # directories whose .py files make up the symbol corpus
